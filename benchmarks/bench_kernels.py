@@ -1,0 +1,66 @@
+"""Kernel micro-bench: wall-clock of the jnp oracles on CPU (the Pallas
+kernels themselves target TPU; interpret mode is a correctness harness, not a
+performance one — so the perf-relevant CSV rows here are oracle timings plus
+the kernels' analytic FLOP counts)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def main(emit=print, small: bool = True):
+    emit("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+
+    from repro.kernels.flash_attention import ref as fref
+    B, S, H, K, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(key, (B, S, K, D))
+    v = jax.random.normal(key, (B, S, K, D))
+    f = jax.jit(lambda q, k, v: fref.attention(q, k, v, True))
+    us = _time(f, q, k, v)
+    flops = 4 * B * S * S * H * D
+    emit(f"attention_ref_{B}x{S}x{H}x{D},{us:.1f},{flops/us/1e3:.2f}GFLOPs")
+
+    from repro.kernels.rmsnorm import ref as rref
+    x = jax.random.normal(key, (4096, 512))
+    s = jnp.ones((512,))
+    us = _time(jax.jit(rref.rms_norm), x, s)
+    emit(f"rmsnorm_ref_4096x512,{us:.1f},{x.size*4*2/us/1e3:.2f}GBps")
+
+    from repro.kernels.ssd import ref as sref
+    B2, S2, H2, P2, G2, N2 = 1, 512, 4, 32, 1, 32
+    xs = jax.random.normal(key, (B2, S2, H2, P2))
+    dt = jax.nn.softplus(jax.random.normal(key, (B2, S2, H2))) * 0.1
+    A = -jnp.exp(jax.random.normal(key, (H2,)) * 0.3)
+    Bm = jax.random.normal(key, (B2, S2, G2, N2)) * 0.3
+    Cm = jax.random.normal(key, (B2, S2, G2, N2)) * 0.3
+    f = jax.jit(lambda *a: sref.ssd_chunked(*a, 64)[0])
+    us = _time(f, xs, dt, A, Bm, Cm)
+    emit(f"ssd_chunked_ref_{S2}x{H2}x{P2}x{N2},{us:.1f},-")
+
+    from repro.kernels.xent import ops as xops
+    h = jax.random.normal(key, (4, 128, 64))
+    w = jax.random.normal(key, (64, 4096)) * 0.1
+    lab = jax.random.randint(key, (4, 128), 0, 4096)
+    f = jax.jit(lambda h, w: xops.token_chunked_xent(h, w, lab, None, 128))
+    us = _time(f, h, w)
+    emit(f"token_chunked_xent_512x4096,{us:.1f},-")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""§Roofline table: aggregate the dry-run JSON records into the per-(arch ×
+shape × mesh) roofline report.
+
+Two sets of terms per cell:
+- **analytic** (primary): exact cost-model terms — per-stage 2NMK FLOPs ×
+  schedule execution counts, modeled HBM traffic, modeled collective bytes
+  (see ``repro/launch/analytic.py``); immune to the XLA-CPU cost-analysis
+  while-body-once artifact;
+- **hlo** (diagnostic): ``cost_analysis``/HLO-parsed terms as prescribed —
+  under-counted for scan-in-loop models (documented in EXPERIMENTS §Caveats).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(dry_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+            r["_file"] = os.path.basename(path)
+            recs.append(r)
+    return recs
+
+
+def main(emit=print, dry_dir: str = "experiments/dryrun", small: bool = True):
+    recs = load_records(dry_dir)
+    emit("arch,shape,mesh,policy,ana_compute_s,ana_memory_s,ana_collective_s,"
+         "ana_dominant,hlo_compute_s,hlo_memory_s,hlo_collective_s,"
+         "useful_ratio,model_act_peak_GiB,cpu_sched_peak_GiB")
+    for r in recs:
+        if "__iter" in r["_file"] or "__ctl" in r["_file"]:
+            continue  # perf iterations listed in EXPERIMENTS §Perf
+        roof = r["roofline"]
+        ana = r.get("analytic", {})
+        act = r["memory"].get("model_peak_activations")
+        emit(f"{r['arch']},{r['shape']},{r['mesh']},{r.get('policy')},"
+             f"{ana.get('compute_s', float('nan')):.4f},"
+             f"{ana.get('memory_s', float('nan')):.4f},"
+             f"{ana.get('collective_s', float('nan')):.4f},"
+             f"{ana.get('dominant', '?')},"
+             f"{roof['compute_s']:.4f},{roof['memory_s']:.4f},"
+             f"{roof['collective_s']:.4f},{roof['useful_ratio']:.3f},"
+             f"{'' if act is None else round(act / 2**30, 2)},"
+             f"{r['memory']['peak_bytes'] / 2**30:.2f}")
+    if not recs:
+        emit("# no dry-run records found — run: "
+             "PYTHONPATH=src python -m repro.launch.dryrun --all")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper §5.2: DP solver runtime vs chain length (their C implementation:
+<1 s typical, ~20 s at L=339 / S=500; ours is vectorized numpy)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.chain import Chain
+from repro.core.schedule import Schedule, simulate
+from repro.core.solver import solve_optimal
+
+
+def run(lengths=(20, 50, 100, 200, 339), num_slots=500, emit=print):
+    emit("L,num_slots,solve_s,feasible,expected_time")
+    rng = np.random.default_rng(0)
+    out = []
+    for L in lengths:
+        n = L + 1
+        ch = Chain.make(
+            uf=rng.uniform(0.5, 2.0, n), ub=rng.uniform(1.0, 4.0, n),
+            wa=rng.uniform(0.5, 2.0, n), wabar=rng.uniform(1.0, 4.0, n))
+        peak = simulate(ch, Schedule.store_all(L)).peak_mem
+        t0 = time.perf_counter()
+        sol = solve_optimal(ch, peak * 0.4, num_slots=num_slots)
+        dt = time.perf_counter() - t0
+        emit(f"{L},{num_slots},{dt:.2f},{sol.feasible},"
+             f"{sol.expected_time:.2f}")
+        out.append((L, dt, sol.feasible))
+    return out
+
+
+def main(emit=print, small: bool = True):
+    lengths = (20, 50, 100) if small else (20, 50, 100, 200, 339)
+    return run(lengths=lengths, num_slots=200 if small else 500, emit=emit)
+
+
+if __name__ == "__main__":
+    main(small=False)

@@ -1,0 +1,79 @@
+"""Benchmark model chains: a heterogeneous conv (ResNet-ish) chain — the
+paper's own workload family — and a transformer chain, both CPU-sized."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def resnet_ish_chain(num_blocks: int = 8, base_ch: int = 16,
+                     image: int = 32, batch: int = 8, seed: int = 0):
+    """Heterogeneous conv chain: channel widths double / resolution halves at
+    stage boundaries (the paper's ResNet setting, scaled to CPU).  Returns
+    (stages, params, x)."""
+    key = jax.random.PRNGKey(seed)
+    stages, params = [], []
+    ch_in = 3
+    ch = base_ch
+    res = image
+    for i in range(num_blocks):
+        stride = 2 if (i % 3 == 2 and res > 4) else 1
+        k1 = jax.random.normal(jax.random.fold_in(key, 2 * i),
+                               (3, 3, ch_in, ch)) * (0.4 / ch_in ** 0.5)
+        k2 = jax.random.normal(jax.random.fold_in(key, 2 * i + 1),
+                               (3, 3, ch, ch)) * (0.4 / ch ** 0.5)
+        skip = (jax.random.normal(jax.random.fold_in(key, 1000 + i),
+                                  (1, 1, ch_in, ch)) * (1.0 / ch_in ** 0.5)
+                if (ch_in != ch or stride > 1) else None)
+        p = {"k1": k1, "k2": k2}
+        if skip is not None:
+            p["skip"] = skip
+
+        def block(p, a, stride=stride):
+            y = jax.lax.conv_general_dilated(
+                a, p["k1"], (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            y = jax.nn.relu(y)
+            y = jax.lax.conv_general_dilated(
+                y, p["k2"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            if "skip" in p:
+                a = jax.lax.conv_general_dilated(
+                    a, p["skip"], (stride, stride), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            return jax.nn.relu(y + a)
+
+        stages.append(block)
+        params.append(p)
+        ch_in = ch
+        if stride == 2:
+            res //= 2
+            ch *= 2
+    # loss stage: global pool + mean-square
+    params.append({})
+    stages.append(lambda p, a: jnp.mean(jnp.mean(a, axis=(1, 2)) ** 2))
+    x = jax.random.normal(jax.random.fold_in(key, 9999),
+                          (batch, image, image, 3))
+    return stages, params, x
+
+
+def transformer_chain(num_layers: int = 8, d_model: int = 128,
+                      seq: int = 128, batch: int = 4, vocab: int = 512,
+                      seed: int = 0):
+    """Decoder-LM chain via the repro model zoo (one layer per stage)."""
+    from repro.configs import smoke_config
+    from repro.models.lm import StagedLM
+
+    cfg = smoke_config("qwen1.5-4b", num_layers=num_layers,
+                       layer_kinds=("dense",) * num_layers,
+                       d_model=d_model, n_heads=4, n_kv_heads=4,
+                       head_dim=d_model // 4, d_ff=4 * d_model,
+                       vocab_size=vocab, n_chunks=num_layers)
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed + 1)
+    batch_d = {"tokens": jax.random.randint(key, (batch, seq), 0, vocab),
+               "labels": jax.random.randint(key, (batch, seq), 0, vocab),
+               "loss_mask": jnp.ones((batch, seq), jnp.float32)}
+    return model.stage_fns(), model.stage_params(params), batch_d

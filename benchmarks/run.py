@@ -1,0 +1,41 @@
+"""Benchmark driver — one bench per paper table/figure.  Prints
+``name,us_per_call,derived``-style CSV sections.  ``--full`` runs the
+paper-scale variants (L=339 solver, 12-block chains)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: tradeoff,solver,prediction,roofline,kernels")
+    args = ap.parse_args(argv)
+    small = not args.full
+    which = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_kernels, bench_prediction, bench_roofline,
+                   bench_solver, bench_tradeoff)
+
+    benches = [
+        ("tradeoff", bench_tradeoff, "paper Figs 3-13: throughput vs memory"),
+        ("solver", bench_solver, "paper §5.2: DP runtime vs chain length"),
+        ("prediction", bench_prediction, "paper §5.3: model-vs-measured error"),
+        ("roofline", bench_roofline, "§Roofline: dry-run roofline table"),
+        ("kernels", bench_kernels, "kernel micro-bench"),
+    ]
+    for name, mod, desc in benches:
+        if which and name not in which:
+            continue
+        print(f"\n### bench:{name} — {desc}")
+        t0 = time.perf_counter()
+        mod.main(emit=print, small=small)
+        print(f"### bench:{name} done in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

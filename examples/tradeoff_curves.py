@@ -1,0 +1,11 @@
+"""Reproduce the paper's throughput-vs-memory tradeoff (Figs 3-5) on CPU:
+measures per-stage costs, then sweeps memory budgets for the four strategies
+and prints the curve points (+ the §5.4 headline gain).
+
+Run:  PYTHONPATH=src python examples/tradeoff_curves.py
+"""
+
+from benchmarks.bench_tradeoff import main
+
+if __name__ == "__main__":
+    main(small=True)

@@ -1,0 +1,174 @@
+"""Fault-tolerant checkpoint manager (npz-sharded, manifest-driven).
+
+Properties required at 1000-node scale and implemented here:
+
+- **atomic**: writes go to ``step_N.tmp/`` and are ``rename``d only after the
+  manifest (with per-leaf checksums) is fsynced — a crash mid-write never
+  corrupts the latest checkpoint;
+- **async**: ``save(..., blocking=False)`` snapshots to host memory and
+  writes on a background thread so the train loop keeps stepping;
+- **keep-k** retention with newest-first restore fallback: if the newest
+  checkpoint fails its checksum (torn write on a failed node), restore walks
+  back to the previous one;
+- **elastic**: arrays are stored unsharded (per-leaf files); restore takes a
+  *target* sharding tree and ``device_put``s each leaf — so a checkpoint
+  written on mesh A restores onto mesh B with different device counts
+  (tested 8 hosts → 4 hosts in tests/test_ckpt.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write --------------------------------------------------------------
+
+    def save(self, step: int, state: Any, blocking: bool = True) -> None:
+        self.wait()  # one async save in flight at a time
+        # snapshot to host memory synchronously (cheap vs device compute)
+        leaves = _flatten(state)
+        structure = jax.tree_util.tree_structure(state)
+        if blocking:
+            self._write(step, leaves, structure)
+        else:
+            self._thread = threading.Thread(
+                target=self._write_guard, args=(step, leaves, structure),
+                daemon=True)
+            self._thread.start()
+
+    def _write_guard(self, step, leaves, structure):
+        try:
+            self._write(step, leaves, structure)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, leaves, structure) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "treedef": str(structure), "leaves": {}}
+        for key, arr in leaves:
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _verify_and_load(self, step: int) -> Optional[Dict[str, np.ndarray]]:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            leaves = {}
+            for key, meta in manifest["leaves"].items():
+                arr = np.load(os.path.join(path, meta["file"]))
+                if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
+                    return None  # torn write
+                leaves[key] = arr
+            return leaves
+        except (OSError, ValueError, KeyError):
+            return None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs).  Walks back through retained checkpoints until
+        one passes checksum verification.  ``shardings``: matching pytree of
+        (Named)Shardings for elastic placement onto the current mesh."""
+        candidates = ([step] if step is not None
+                      else list(reversed(self.all_steps())))
+        for s in candidates:
+            leaves = self._verify_and_load(s)
+            if leaves is None:
+                continue
+            flat = jax.tree_util.tree_flatten_with_path(target)
+            paths, treedef = flat[0], flat[1]
+            shard_leaves = (jax.tree.leaves(shardings,
+                                            is_leaf=lambda x: x is None)
+                            if shardings is not None else [None] * len(paths))
+            out = []
+            for (path, leaf), shd in zip(paths, shard_leaves):
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in path)
+                if key not in leaves:
+                    raise KeyError(f"checkpoint step {s} missing leaf {key}")
+                arr = leaves[key].astype(np.dtype(leaf.dtype))
+                if shd is not None:
+                    out.append(jax.device_put(arr, shd))
+                else:
+                    out.append(jax.numpy.asarray(arr))
+            return s, jax.tree_util.tree_unflatten(treedef, out)
+        raise FileNotFoundError(
+            f"no valid checkpoint found in {self.dir} (tried {candidates})")
+
+
+def restore_to_sharding(manager: CheckpointManager, target: Any,
+                        shardings: Any, step: Optional[int] = None):
+    return manager.restore(target, step=step, shardings=shardings)

@@ -1,0 +1,2 @@
+from .archs import ARCHS, get_config, smoke_config
+from .shapes import SHAPES, ShapeSpec, applicable, cells, input_specs

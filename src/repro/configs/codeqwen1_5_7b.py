@@ -1,0 +1,8 @@
+"""Config module for --arch codeqwen1.5-7b (see archs.py for the spec)."""
+from .archs import codeqwen15_7b as config, smoke_config as _smoke
+
+ARCH = "codeqwen1.5-7b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

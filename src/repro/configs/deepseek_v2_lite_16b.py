@@ -1,0 +1,8 @@
+"""Config module for --arch deepseek-v2-lite-16b (see archs.py for the spec)."""
+from .archs import deepseek_v2_lite as config, smoke_config as _smoke
+
+ARCH = "deepseek-v2-lite-16b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

@@ -1,0 +1,8 @@
+"""Config module for --arch mamba2-1.3b (see archs.py for the spec)."""
+from .archs import mamba2_13b as config, smoke_config as _smoke
+
+ARCH = "mamba2-1.3b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

@@ -1,0 +1,8 @@
+"""Config module for --arch moonshot-v1-16b-a3b (see archs.py for the spec)."""
+from .archs import moonshot_16b_a3b as config, smoke_config as _smoke
+
+ARCH = "moonshot-v1-16b-a3b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

@@ -1,0 +1,8 @@
+"""Config module for --arch musicgen-medium (see archs.py for the spec)."""
+from .archs import musicgen_medium as config, smoke_config as _smoke
+
+ARCH = "musicgen-medium"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

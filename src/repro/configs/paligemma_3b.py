@@ -1,0 +1,8 @@
+"""Config module for --arch paligemma-3b (see archs.py for the spec)."""
+from .archs import paligemma_3b as config, smoke_config as _smoke
+
+ARCH = "paligemma-3b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

@@ -1,0 +1,17 @@
+"""The paper's own workload family: a heterogeneous convolutional chain
+(ResNet-style — the paper evaluates ResNet/DenseNet/Inception, §5.3).
+
+Not part of the assigned LM pool; used by the reproduction benchmarks
+(`benchmarks/bench_tradeoff.py`, `examples/tradeoff_curves.py`) where the
+four strategies (store-all / sequential / revolve / optimal) are compared
+exactly as in the paper's Figures 3–13, with measured per-stage costs.
+"""
+
+from benchmarks.chains import resnet_ish_chain as chain  # noqa: F401
+
+ARCH = "paper-resnet"
+
+
+def config(num_blocks: int = 8, image: int = 32, batch: int = 8, **kw):
+    """Returns (stages, params, x) — a rotor chain, not an LM config."""
+    return chain(num_blocks=num_blocks, image=image, batch=batch, **kw)

@@ -1,0 +1,8 @@
+"""Config module for --arch qwen1.5-110b (see archs.py for the spec)."""
+from .archs import qwen15_110b as config, smoke_config as _smoke
+
+ARCH = "qwen1.5-110b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

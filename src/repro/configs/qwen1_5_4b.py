@@ -1,0 +1,8 @@
+"""Config module for --arch qwen1.5-4b (see archs.py for the spec)."""
+from .archs import qwen15_4b as config, smoke_config as _smoke
+
+ARCH = "qwen1.5-4b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

@@ -1,0 +1,83 @@
+"""The four assigned input-shape sets and their applicability rules."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# long_500k needs sub-quadratic sequence mixing: only the SSM and hybrid archs
+# run it (see DESIGN.md §Arch-applicability); pure full-attention archs skip.
+LONG_CONTEXT_ARCHS = ("mamba2-1.3b", "zamba2-2.7b")
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def cells(archs) -> list:
+    """All assigned (arch × shape) dry-run cells."""
+    out = []
+    for a in archs:
+        for s in SHAPES:
+            if applicable(a, s):
+                out.append((a, s))
+    return out
+
+
+def input_specs(cfg, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape cell
+    (weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = cfg.dtype
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        if cfg.modality == "text":
+            return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32),
+                    "loss_mask": sds((B, S), jnp.float32)}
+        if cfg.modality == "audio_embed":
+            return {"embeds": sds((B, S, cfg.d_model), f),
+                    "labels": sds((B, S), i32),
+                    "loss_mask": sds((B, S), jnp.float32)}
+        P = cfg.prefix_len
+        return {"image_embeds": sds((B, P, cfg.d_model), f),
+                "tokens": sds((B, S - P), i32),
+                "labels": sds((B, S - P), i32),
+                "loss_mask": sds((B, S - P), jnp.float32)}
+    if shape.kind == "prefill":
+        if cfg.modality == "text":
+            return {"tokens": sds((B, S), i32)}
+        if cfg.modality == "audio_embed":
+            return {"embeds": sds((B, S, cfg.d_model), f)}
+        P = cfg.prefix_len
+        return {"image_embeds": sds((B, P, cfg.d_model), f),
+                "tokens": sds((B, S - P), i32)}
+    # decode: one new token against a cache of length S (cache specs are
+    # produced separately via eval_shape of init_cache)
+    if cfg.modality == "audio_embed":
+        return {"tokens": sds((B, 1, cfg.d_model), f)}
+    return {"tokens": sds((B, 1), i32)}

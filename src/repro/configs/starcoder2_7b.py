@@ -1,0 +1,8 @@
+"""Config module for --arch starcoder2-7b (see archs.py for the spec)."""
+from .archs import starcoder2_7b as config, smoke_config as _smoke
+
+ARCH = "starcoder2-7b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

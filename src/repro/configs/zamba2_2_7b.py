@@ -1,0 +1,8 @@
+"""Config module for --arch zamba2-2.7b (see archs.py for the spec)."""
+from .archs import zamba2_27b as config, smoke_config as _smoke
+
+ARCH = "zamba2-2.7b"
+
+
+def smoke(**ov):
+    return _smoke(ARCH, **ov)

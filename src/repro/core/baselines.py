@@ -1,0 +1,89 @@
+"""Baseline checkpointing strategies the paper compares against (§5.3).
+
+- ``store_all``      — the **PyTorch** strategy: autograd default, keep every
+                       residual (``Schedule.store_all``).
+- ``periodic``       — the **sequential** strategy (PyTorch
+                       ``checkpoint_sequential`` [1], idea of Chen et al. [6]):
+                       split the chain into ``k`` segments, store each segment
+                       input on the forward pass, replay each segment with
+                       ``F_all`` before its backward.  The last segment is not
+                       replayed (computed with ``F_all`` directly), matching
+                       the paper: "Each forward computation is thus performed
+                       twice, except those of the last segment."
+- ``chen_sqrt``      — ``periodic`` with ``k = ceil(sqrt(L))`` (the classic
+                       sublinear-memory heuristic).
+- ``revolve``        — optimal AD-model strategy adapted to heterogeneous
+                       chains: checkpoints are restricted to plain activations
+                       ``a`` and every backward is preceded by ``F_all``; we
+                       obtain it from the same DP with the ``F_all``-first
+                       branch disabled (``solve_optimal(allow_fall=False)``).
+                       This is the strategy of paper §5.3 / [14] Appendix C
+                       (in fact a slightly *stronger* variant: optimized
+                       directly in the true cost model rather than converted
+                       post-hoc, so it can only make the comparator better).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+
+from .chain import Chain
+from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule
+from .solver import Solution, solve_optimal
+
+
+def periodic(chain: Chain, num_segments: int) -> Schedule:
+    """PyTorch ``checkpoint_sequential`` with ``num_segments`` segments.
+
+    Stages 1..L are split into segments; the loss stage L+1 is appended to the
+    last segment (torch's tool checkpoints the user-provided sequential module;
+    the loss is computed outside it, with grad).
+    """
+    L = chain.length
+    k = max(1, min(num_segments, L))
+    bounds = np.linspace(0, L, k + 1).astype(int)  # segment i = stages (b[i], b[i+1]]
+    segments: List[List[int]] = [
+        list(range(bounds[i] + 1, bounds[i + 1] + 1)) for i in range(k)
+    ]
+    segments[-1].append(L + 1)  # loss stage rides with the last segment
+
+    ops = []
+    # forward phase: checkpoint each segment input, stream inside; the last
+    # segment runs with F_all (it is backpropagated immediately, no replay).
+    for seg in segments[:-1]:
+        ops.append((F_CK, seg[0]))
+        ops.extend((F_NONE, l) for l in seg[1:])
+    ops.extend((F_ALL, l) for l in segments[-1])
+    # backward phase
+    ops.extend((BWD, l) for l in reversed(segments[-1]))
+    for seg in reversed(segments[:-1]):
+        ops.extend((F_ALL, l) for l in seg)
+        ops.extend((BWD, l) for l in reversed(seg))
+    return Schedule(L, ops)
+
+
+def chen_sqrt(chain: Chain) -> Schedule:
+    return periodic(chain, int(math.ceil(math.sqrt(chain.length))))
+
+
+def revolve(chain: Chain, mem_limit: float, num_slots: int = 500) -> Solution:
+    return solve_optimal(chain, mem_limit, num_slots, allow_fall=False)
+
+
+def best_periodic(chain: Chain, mem_limit: float) -> tuple:
+    """Best feasible segment count for ``periodic`` under ``mem_limit`` —
+    the paper sweeps 2..2*sqrt(L) segments and keeps the best (§5.3)."""
+    from .schedule import simulate
+
+    L = chain.length
+    best = None
+    hi = max(2, int(2 * math.sqrt(L)) + 1)
+    for k in range(1, min(L, hi) + 1):
+        sched = periodic(chain, k)
+        res = simulate(chain, sched, mem_limit)
+        if res.valid and (best is None or res.time < best[1].time):
+            best = (k, res, sched)
+    return best  # None if no segment count fits

@@ -1,0 +1,131 @@
+"""Paper-faithful eager executor: runs the op *sequence* literally.
+
+This is the JAX analogue of the paper's PyTorch tool (§5): it walks the
+schedule op by op, maintaining an explicit saved-set:
+
+- ``F_all^l``  → ``jax.vjp(stage_l, params_l, a)``; the returned vjp closure
+  *is* ``ā^l`` (its pytree leaves are the residual tensors).
+- ``F_ck^l``   → plain forward; the input stays in the saved-set.
+- ``F_∅^l``    → plain forward; the input is dropped.
+- ``B^l``      → call the stored vjp with ``δ^l``; accumulate parameter
+  cotangents; the result is ``δ^{l-1}``.
+
+Used to (a) validate that rotor computes *exactly the same gradients* as plain
+autograd (the paper's "same results" guarantee, §1), and (b) run the eager
+CPU reproduction benchmarks where real per-op wall-clock matters.  The
+production path is ``rematerialize.build_remat_fn`` (nested remat under jit).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule
+
+
+def _tree_bytes(tree: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        nb = getattr(leaf, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+    return total
+
+
+def execute_schedule(
+    schedule: Schedule,
+    stages: Sequence[Callable],
+    params: Sequence[Any],
+    x: Any,
+    loss_cotangent: Any = None,
+    track_live_bytes: bool = False,
+) -> Tuple[Any, List[Any], Any]:
+    """Run forward+backward per ``schedule``.
+
+    Returns ``(loss_output, param_grads, input_grad)``. ``stages[l-1]`` maps
+    paper stage ``l``; the last stage must produce the loss (a scalar) unless
+    ``loss_cotangent`` is supplied.
+
+    With ``track_live_bytes=True`` additionally returns a 4th element: the
+    **empirical** peak of the executor's saved-set in bytes (activations,
+    vjp residuals and pending gradients it holds references to after each
+    op) — real array memory, the paper's memory claim measured rather than
+    modeled.  The vjp closures' pytree leaves *are* the residual tensors
+    (``ā``), so this observes exactly what the Table-1 model accounts.
+    """
+    L = schedule.length
+    acts: Dict[int, Any] = {0: x}          # bare a^i values
+    vjps: Dict[int, Any] = {}              # ā^l  (vjp closures)
+    outs: Dict[int, Any] = {}              # stage outputs recorded by F_all
+    deltas: Dict[int, Any] = {}
+    grads: List[Any] = [None] * (L + 1)
+    final_out = None
+    peak_live = 0
+
+    def get_act(i: int):
+        if i in acts:
+            return acts[i]
+        if i in outs:  # a^i readable from ā^i (Table 1, second line)
+            return outs[i]
+        raise RuntimeError(f"a^{i} not available — invalid schedule")
+
+    for kind, l in schedule.ops:
+        if kind in (F_NONE, F_CK, F_ALL):
+            a_in = get_act(l - 1)
+            if kind == F_ALL:
+                out, vjp_fn = jax.vjp(stages[l - 1], params[l - 1], a_in)
+                vjps[l] = vjp_fn
+                outs[l] = out
+                if l == L + 1:
+                    final_out = out
+            else:
+                out = stages[l - 1](params[l - 1], a_in)
+                acts[l] = out
+                if l == L + 1:
+                    final_out = out
+            if kind == F_NONE:
+                acts.pop(l - 1, None)
+        elif kind == BWD:
+            if l == L + 1:
+                out = outs[l]
+                if loss_cotangent is not None:
+                    delta = loss_cotangent
+                else:
+                    delta = jax.tree.map(lambda o: jnp.ones_like(o), out)
+            else:
+                delta = deltas.pop(l)
+            dparams, da = vjps.pop(l)(delta)
+            outs.pop(l, None)
+            grads[l - 1] = dparams if grads[l - 1] is None else jax.tree.map(
+                jnp.add, grads[l - 1], dparams)
+            deltas[l - 1] = da
+            acts.pop(l - 1, None)  # B^l consumes a^{l-1}
+        else:
+            raise ValueError(f"executor cannot run op kind {kind}")
+        if track_live_bytes:
+            live = (_tree_bytes(acts) + _tree_bytes(vjps) + _tree_bytes(outs)
+                    + _tree_bytes(deltas))
+            peak_live = max(peak_live, live)
+
+    if 0 not in deltas:
+        raise RuntimeError("schedule did not produce δ^0")
+    if track_live_bytes:
+        return final_out, grads, deltas[0], peak_live
+    return final_out, grads, deltas[0]
+
+
+def reference_grads(stages: Sequence[Callable], params: Sequence[Any], x: Any
+                    ) -> Tuple[Any, List[Any], Any]:
+    """Plain autograd over the composed chain — the correctness oracle."""
+
+    def composed(params, x):
+        for fn, p in zip(stages, params):
+            x = fn(p, x)
+        return x
+
+    out, vjp_fn = jax.vjp(composed, list(params), x)
+    dparams, dx = vjp_fn(jax.tree.map(lambda o: jnp.ones_like(o), out))
+    return out, list(dparams), dx

@@ -1,0 +1,68 @@
+"""Config-facing remat policies: string → schedule tree.
+
+``make_policy_tree(policy, chain)`` accepts:
+
+- ``"none"``          — store everything (autograd default / paper "PyTorch").
+- ``"full"``          — remat every stage (minimum memory, max recompute).
+- ``"periodic:K"``    — the paper's "sequential" comparator with K segments.
+- ``"rotor:BUDGET"``  — the paper's optimal persistent schedule under BUDGET
+                        bytes of activation memory (per device).  BUDGET
+                        accepts ``1.5e9``, ``1.5G``, ``800M``, or ``x0.5``
+                        (fraction of the store-all peak).
+- ``"revolve:BUDGET"``— AD-model comparator (activations-only checkpoints).
+
+The returned tree feeds :func:`repro.core.rematerialize.build_remat_fn`.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from .chain import Chain
+from .rematerialize import full_remat_tree, periodic_tree, sequential_tree
+from .schedule import Schedule, simulate
+from .solver import Tree, solve_optimal
+
+_UNITS = {"K": 1e3, "M": 1e6, "G": 1e9, "T": 1e12}
+
+
+def parse_budget(spec: str, chain: Optional[Chain]) -> float:
+    spec = spec.strip()
+    if spec.startswith("x"):
+        if chain is None:
+            raise ValueError("fractional budget needs a profiled chain")
+        peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
+        return float(spec[1:]) * peak
+    m = re.fullmatch(r"([\d.eE+-]+)([KMGT]?)", spec)
+    if not m:
+        raise ValueError(f"cannot parse memory budget {spec!r}")
+    return float(m.group(1)) * _UNITS.get(m.group(2), 1.0)
+
+
+def make_policy_tree(policy: str, chain: Optional[Chain],
+                     length: Optional[int] = None,
+                     num_slots: int = 500) -> Tree:
+    if chain is not None:
+        length = chain.length
+    if length is None:
+        raise ValueError("need chain or length")
+    if policy == "none":
+        return sequential_tree(length)
+    if policy == "full":
+        return full_remat_tree(length)
+    if policy.startswith("periodic:"):
+        return periodic_tree(length, int(policy.split(":", 1)[1]))
+    if policy.startswith(("rotor:", "revolve:")):
+        if chain is None:
+            raise ValueError(f"{policy!r} needs a profiled chain")
+        kind, spec = policy.split(":", 1)
+        budget = parse_budget(spec, chain)
+        sol = solve_optimal(chain, budget, num_slots=num_slots,
+                            allow_fall=(kind == "rotor"))
+        if not sol.feasible:
+            raise MemoryError(
+                f"{kind}: no feasible persistent schedule within "
+                f"{budget:.3e} bytes for this chain")
+        return sol.tree
+    raise ValueError(f"unknown remat policy {policy!r}")

@@ -1,0 +1,125 @@
+"""Compile a persistent-schedule recursion tree into a nested-``jax.checkpoint``
+function — the production execution path (§2 of DESIGN.md).
+
+Correspondence (exact, per-node):
+
+- ``Leaf(s)`` / ``AllNode(s)``  →  stage ``s`` applied *plain*: when the
+  enclosing scope is (re)executed, XLA records stage ``s``'s residuals — this
+  is ``F_all^s`` (+ its later ``B^s``).
+- ``CkNode(s, sp, right, left)``  →  ``right_fn ∘ jax.checkpoint(left_fn)``:
+  the forward of ``jax.checkpoint`` runs ``left_fn`` (stages ``s..sp-1``)
+  saving only its input ``a^{s-1}`` — this is ``F_ck^s`` followed by ``F_∅``;
+  on the backward, ``left_fn`` is replayed and *its* internal checkpoint
+  structure applies — exactly the OptRec recursion on ``[s, sp-1]``.
+
+The builder returns ``f(params, x)`` where ``params`` is a per-stage sequence;
+``jax.grad(f)`` then executes the paper's schedule structurally under XLA.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+
+from .solver import AllNode, CkNode, Leaf, Tree
+
+StageFn = Callable  # (stage_params, activation) -> activation
+
+
+def build_remat_fn(tree: Tree, stages: Sequence[StageFn],
+                   checkpoint_policy=None) -> Callable:
+    """Return ``f(params, x)`` executing the chain per the schedule tree.
+
+    ``stages[l-1]`` is the callable for paper-stage ``l`` (1-based). ``params``
+    passed to ``f`` must be indexable the same way.  ``checkpoint_policy``
+    (optional ``jax.checkpoint_policies.*``) applies to every ``F_ck`` scope —
+    the paper's model corresponds to the default (save nothing but inputs).
+    """
+
+    def rec(node: Tree) -> Callable:
+        if isinstance(node, Leaf):
+            s = node.s
+            return lambda params, x: stages[s - 1](params[s - 1], x)
+        if isinstance(node, AllNode):
+            s = node.s
+            rest = rec(node.rest)
+            return lambda params, x: rest(params, stages[s - 1](params[s - 1], x))
+        if isinstance(node, CkNode):
+            left = rec(node.left)    # stages [s, sp-1]
+            right = rec(node.right)  # stages [sp, t]
+            kwargs = {}
+            if checkpoint_policy is not None:
+                kwargs["policy"] = checkpoint_policy
+            left_ck = jax.checkpoint(left, **kwargs)
+            return lambda params, x: right(params, left_ck(params, x))
+        raise TypeError(f"unknown tree node {node!r}")
+
+    return rec(tree)
+
+
+def sequential_tree(length: int) -> Tree:
+    """Store-all tree: every stage plain (AllNode chain) — autograd default."""
+    node: Tree = Leaf(length + 1)
+    for s in range(length, 0, -1):
+        node = AllNode(s, node)
+    return node
+
+
+def full_remat_tree(length: int) -> Tree:
+    """``F_ck`` every stage: remat everything (max recompute, min memory)."""
+
+    def make(s: int, t: int) -> Tree:
+        if s == t:
+            return Leaf(s)
+        # checkpoint a^{s-1}, stream just stage s, recurse on the rest
+        return CkNode(s, s + 1, make(s + 1, t), Leaf(s))
+
+    return make(1, length + 1)
+
+
+def periodic_tree(length: int, num_segments: int) -> Tree:
+    """The `sequential` baseline (torch checkpoint_sequential) as a tree:
+    each non-final segment is a CkNode whose left child is a plain sub-chain."""
+    import numpy as np
+
+    L = length
+    k = max(1, min(num_segments, L))
+    bounds = np.linspace(0, L, k + 1).astype(int)
+    segments = [(int(bounds[i]) + 1, int(bounds[i + 1])) for i in range(k)]
+    # last segment includes the loss stage
+    segments[-1] = (segments[-1][0], L + 1)
+
+    def plain(a: int, b: int) -> Tree:
+        node: Tree = Leaf(b)
+        for s in range(b - 1, a - 1, -1):
+            node = AllNode(s, node)
+        return node
+
+    def rec(i: int) -> Tree:
+        a, b = segments[i]
+        if i == len(segments) - 1:
+            return plain(a, b)
+        return CkNode(a, b + 1, rec(i + 1), plain(a, b))
+
+    return rec(0)
+
+
+def tree_stage_span(tree: Tree) -> tuple:
+    """(first, last) stage covered by a tree (sanity checking)."""
+    if isinstance(tree, Leaf):
+        return tree.s, tree.s
+    if isinstance(tree, AllNode):
+        _, last = tree_stage_span(tree.rest)
+        return tree.s, last
+    a, _ = tree_stage_span(tree.left)
+    _, b = tree_stage_span(tree.right)
+    return a, b
+
+
+def count_checkpoint_scopes(tree: Tree) -> int:
+    if isinstance(tree, Leaf):
+        return 0
+    if isinstance(tree, AllNode):
+        return count_checkpoint_scopes(tree.rest)
+    return 1 + count_checkpoint_scopes(tree.left) + count_checkpoint_scopes(tree.right)

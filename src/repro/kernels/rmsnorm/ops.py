@@ -1,0 +1,44 @@
+"""jit'd wrapper: flattens leading dims, pads rows, differentiable via
+recompute-from-inputs VJP (residual = x and scale only)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import rms_norm_2d
+
+_INTERPRET = [False]
+
+
+def set_interpret(flag: bool) -> None:
+    _INTERPRET[0] = bool(flag)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    pad = (-n) % 8
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rms_norm_2d(x2, scale, eps, interpret=_INTERPRET[0])
+    return out[:n].reshape(*lead, d)
+
+
+def _fwd(x, scale, eps):
+    return rms_norm(x, scale, eps), (x, scale)
+
+
+def _bwd(eps, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: ref.rms_norm(x_, s_, eps), x, scale)
+    return vjp(g)
+
+
+rms_norm.defvjp(_fwd, _bwd)

@@ -1,0 +1,93 @@
+"""jit'd SSD wrapper: kernel for intra-chunk terms + XLA inter-chunk scan.
+
+Differentiable via recompute-from-inputs VJP against the pure-jnp chunked
+oracle (flash-style: no (Q×Q) residuals stored)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_blocks
+
+_INTERPRET = [False]
+
+
+def set_interpret(flag: bool) -> None:
+    _INTERPRET[0] = bool(flag)
+
+
+def _forward(x, dt, A, Bm, Cm, chunk, init_state):
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if S % chunk:
+        pad = chunk - S % chunk
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, st = _forward(xp, dtp, A, Bp, Cp, chunk, init_state)
+        return y[:, :S], st
+    nc = S // chunk
+    rep = H // G
+    # (B,S,H,P) -> (B*H, nc, Q, P); B/C broadcast per-head
+    xk = x.transpose(0, 2, 1, 3).reshape(B_ * H, nc, chunk, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B_ * H, nc, chunk)
+    Ak = jnp.broadcast_to(A[None, :], (B_, H)).reshape(B_ * H)
+    Bk = jnp.repeat(Bm.transpose(0, 2, 1, 3), rep, axis=1).reshape(
+        B_ * H, nc, chunk, N)
+    Ck = jnp.repeat(Cm.transpose(0, 2, 1, 3), rep, axis=1).reshape(
+        B_ * H, nc, chunk, N)
+
+    y_diag, states = ssd_chunk_blocks(xk, dtk, Ak, Bk, Ck,
+                                      interpret=_INTERPRET[0])
+
+    # inter-chunk recurrence (tiny, sequential over nc)
+    da = dtk.astype(jnp.float32) * Ak[:, None, None].astype(jnp.float32)
+    cs = jnp.cumsum(da, axis=-1)                       # (BH, nc, Q)
+    chunk_decay = jnp.exp(cs[..., -1])                 # (BH, nc)
+    if init_state is None:
+        st0 = jnp.zeros((B_ * H, P, N), jnp.float32)
+    else:
+        st0 = init_state.reshape(B_ * H, P, N).astype(jnp.float32)
+
+    def step(carry, inp):
+        dec, s_c = inp
+        new = carry * dec[:, None, None] + s_c
+        return new, carry
+
+    final, prev = jax.lax.scan(step, st0,
+                               (chunk_decay.T, states.transpose(1, 0, 2, 3)))
+    prev = prev.transpose(1, 0, 2, 3)                  # (BH, nc, P, N)
+
+    y_off = jnp.einsum("bcqn,bcpn,bcq->bcqp", Ck.astype(jnp.float32), prev,
+                       jnp.exp(cs))
+    y = (y_diag + y_off).reshape(B_, H, nc * chunk, P).transpose(0, 2, 1, 3)
+    return y.astype(x.dtype), final.reshape(B_, H, P, N)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Same contract as models.mamba2.ssd_chunked (the oracle)."""
+    return _forward(x, dt, A, Bm, Cm, chunk, init_state)
+
+
+def _fwd(x, dt, A, Bm, Cm, chunk, init_state):
+    out = _forward(x, dt, A, Bm, Cm, chunk, init_state)
+    return out, (x, dt, A, Bm, Cm, init_state)
+
+
+def _bwd(chunk, res, g):
+    x, dt, A, Bm, Cm, init_state = res
+    from . import ref
+
+    def f(x_, dt_, A_, B_, C_, st_):
+        return ref.ssd_chunked(x_, dt_, A_, B_, C_, chunk, st_)
+
+    _, vjp = jax.vjp(f, x, dt, A, Bm, Cm, init_state)
+    return vjp(g)
+
+
+ssd_chunked.defvjp(_fwd, _bwd)

@@ -1,0 +1,43 @@
+"""Oracles for the SSD kernel: (a) the chunked pure-jnp algorithm (shared
+with ``models.mamba2``), (b) a naive O(S·N) sequential recurrence used to
+validate the chunked math itself."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state=None):
+    from ...models.mamba2 import ssd_chunked as _impl
+    return _impl(x, dt, A, Bm, Cm, chunk, init_state, use_kernel=False)
+
+
+def ssd_naive(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential SSM recurrence: the ground truth for all SSD variants.
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,G,N) with G | H.
+    """
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Br = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Cr = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    state = (jnp.zeros((B_, H, P, N), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * A[None])                      # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Br.transpose(1, 0, 2, 3), Cr.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,84 @@
+"""Backfill analytic roofline terms into existing dry-run JSON records
+(no recompilation needed — the analytic model is config-derived).
+
+Usage: PYTHONPATH=src python -m repro.launch.backfill_analytic [DIR]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from types import SimpleNamespace
+
+
+def mesh_stub(mesh_str: str):
+    if mesh_str == "2x16x16":
+        return SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16},
+                               size=512)
+    return SimpleNamespace(shape={"data": 16, "model": 16}, size=256)
+
+
+def backfill(path: str) -> bool:
+    from ..configs import get_config
+    from ..configs.shapes import SHAPES
+    from ..core.solver import tree_to_schedule
+    from ..launch.analytic import decode_terms, prefill_terms, train_terms
+    from ..launch.steps import plan_rotor_tree
+    from ..models.lm import StagedLM
+
+    with open(path) as f:
+        rec = json.load(f)
+    ov = dict(rec.get("overrides") or {})
+    if "layer_kinds" in ov:
+        ov["layer_kinds"] = tuple(ov["layer_kinds"])
+    cfg = get_config(rec["arch"], **ov)
+    shape = SHAPES[rec["shape"]]
+    mesh = mesh_stub(rec["mesh"])
+    model = StagedLM(cfg)
+    if shape.kind == "train":
+        policy = rec.get("policy") or "none"
+        tree, chain = plan_rotor_tree(model, __import__(
+            "repro.configs.shapes", fromlist=["input_specs"]).input_specs(
+            cfg, shape), mesh, None, policy)
+        if chain is None:
+            from ..launch.steps import plan_chain
+            chain = plan_chain(model, __import__(
+                "repro.configs.shapes", fromlist=["input_specs"]).input_specs(
+                cfg, shape), mesh, None)
+        sched = tree_to_schedule(tree, chain.length) if tree is not None else None
+        analytic = train_terms(cfg, shape, mesh, model, chain, sched)
+        # also refresh the model-peak record for train cells
+        from ..core.schedule import Schedule, simulate
+        s = sched or Schedule.store_all(chain.length)
+        rec.setdefault("memory", {})["model_peak_activations"] = float(
+            simulate(chain, s).peak_mem)
+        if tree is not None:
+            from ..core.rematerialize import count_checkpoint_scopes
+            rec["rotor"] = {"ck_scopes": count_checkpoint_scopes(tree)}
+    elif shape.kind == "decode":
+        analytic = decode_terms(cfg, shape, mesh, model)
+    else:
+        analytic = prefill_terms(cfg, shape, mesh, model)
+    terms = {k: analytic[k] for k in ("compute_s", "memory_s", "collective_s")}
+    analytic["dominant"] = max(terms, key=terms.get).replace("_s", "")
+    rec["analytic"] = analytic
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return True
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    n = 0
+    for path in sorted(glob.glob(f"{d}/*.json")):
+        try:
+            backfill(path)
+            n += 1
+        except Exception as e:  # noqa: BLE001
+            print(f"[backfill] {path}: {type(e).__name__}: {e}")
+    print(f"[backfill] updated {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .lm import ModelConfig, StagedLM
+from .common import softmax_cross_entropy

@@ -1,0 +1,336 @@
+"""Attention variants: GQA/MQA (+RoPE, optional QKV bias), DeepSeek-style MLA,
+prefix-LM masking, and KV-cache decode paths for all of them.
+
+Masking is *spec-driven* (causal / prefix / sliding-window / valid-length) —
+the (S×S) mask tensor is never materialized; block masks are built from iotas
+inside each q-block.  For sequences beyond ``direct_attend_max`` the scores
+are computed in a q-block ``lax.scan`` whose body is ``jax.checkpoint``-ed, so
+peak memory is O(block × S) and the backward rematerializes per block (the
+same trade the Pallas flash kernel makes on real TPU; this path is what the
+dry-run lowers since Pallas cannot target the CPU backend)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import apply_rope, dense_apply, dense_init
+
+Params = Dict[str, Any]
+
+NEG = -1e30
+# direct (single-einsum) path below this q·kv size product, chunked above
+DIRECT_ATTEND_MAX = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    causal: bool = True
+    prefix_len: int = 0                  # first N kv positions bidirectional
+    window: Optional[int] = None         # sliding window width
+    kv_len: Optional[int] = None         # true kv length (padding cutoff)
+
+    def block(self, q_pos: jax.Array, k_pos: jax.Array) -> jax.Array:
+        """Boolean mask for broadcastable position index arrays."""
+        m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+        if self.causal:
+            c = k_pos <= q_pos
+            if self.prefix_len:
+                c = c | (k_pos < self.prefix_len)
+            m = m & c
+        if self.window:
+            m = m & (k_pos > q_pos - self.window)
+        if self.kv_len is not None:
+            m = m & (k_pos < self.kv_len)
+        return m
+
+
+def _block_scores_gqa(qblk, k, v, q0, spec: MaskSpec):
+    """qblk: (B,bq,H,D); k/v: (B,S,K,D). Returns (B,bq,H,Dv)."""
+    B, bq, H, D = qblk.shape
+    S, K = k.shape[1], k.shape[2]
+    g = H // K
+    qg = qblk.reshape(B, bq, K, g, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(D)
+    q_pos = q0 + jnp.arange(bq)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = spec.block(q_pos, k_pos)                      # (bq, S)
+    logits = jnp.where(mask[None, None, None], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, bq, H, -1)
+
+
+def _attend(q, k, v, spec: MaskSpec, q_offset: int = 0,
+            block_q: int = 512, use_flash: bool = False) -> jax.Array:
+    """q: (B,Sq,H,D); k/v: (B,Skv,K,D) grouped. Spec-masked attention."""
+    B, Sq, H, D = q.shape
+    if use_flash and spec.causal and not spec.prefix_len and not spec.window:
+        from ..kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(q, k, v, causal=True)
+    if Sq <= DIRECT_ATTEND_MAX:
+        return _block_scores_gqa(q, k, v, q_offset, spec)
+    block_q = min(block_q, Sq)
+    pad = (-Sq) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = q.shape[1] // block_q
+    qb = q.reshape(B, nb, block_q, H, D).transpose(1, 0, 2, 3, 4)
+
+    def body(_, inp):
+        qblk, i = inp
+        out = _block_scores_gqa(qblk, k, v, q_offset + i * block_q, spec)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           (qb, jnp.arange(nb) ))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_q, H, -1)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype) -> Params:
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, (H, Dh), dtype, use_bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, (K, Dh), dtype, use_bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, (K, Dh), dtype, use_bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], H * Dh, d, dtype,
+                         scale=1.0 / math.sqrt(H * Dh * max(cfg.num_layers, 1))),
+    }
+
+
+def gqa_param_axes(cfg) -> Params:
+    qb = {"bias": ("heads", None)} if cfg.qkv_bias else {}
+    kb = {"bias": ("kv", None)} if cfg.qkv_bias else {}
+    return {
+        "wq": {"kernel": ("embed", "heads", None), **qb},
+        "wk": {"kernel": ("embed", "kv", None), **kb},
+        "wv": {"kernel": ("embed", "kv", None), **kb},
+        "wo": {"kernel": ("heads_merged", "embed")},
+    }
+
+
+def _gqa_qkv(p, cfg, x, positions):
+    q = dense_apply(p["wq"], x)            # (B,S,H,Dh)
+    k = dense_apply(p["wk"], x)            # (B,S,K,Dh)
+    v = dense_apply(p["wv"], x)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+    k = constrain(k, "act_batch", "act_seq", "act_kv", None)
+    v = constrain(v, "act_batch", "act_seq", "act_kv", None)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.query_scale is not None:
+        q = q * cfg.query_scale
+    return q, k, v
+
+
+def gqa_apply(p: Params, cfg, x: jax.Array, positions: jax.Array,
+              spec: MaskSpec) -> jax.Array:
+    B, S, d = x.shape
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    out = _attend(q, k, v, spec, block_q=cfg.attn_block_q,
+                  use_flash=cfg.use_flash_attention
+                  and spec.causal and not spec.prefix_len and not spec.window)
+    y = dense_apply(p["wo"], out.reshape(B, S, -1))
+    return constrain(y, "act_batch", "act_seq", "act_embed")
+
+
+def gqa_prefill(p: Params, cfg, x: jax.Array, positions: jax.Array,
+                spec: MaskSpec) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, _ = x.shape
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    out = _attend(q, k, v, spec, block_q=cfg.attn_block_q)
+    y = dense_apply(p["wo"], out.reshape(B, S, -1))
+    return y, {"k": k, "v": v}
+
+
+def gqa_decode(p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array],
+               pos: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B,1,d); cache k/v: (B,S_max,K,Dh); pos scalar."""
+    B = x.shape[0]
+    S_max = cache["k"].shape[1]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _gqa_qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    k = constrain(k, "act_batch", "act_kv_seq", "act_kv", None)
+    v = constrain(v, "act_batch", "act_kv_seq", "act_kv", None)
+    spec = MaskSpec(causal=False, window=cfg.sliding_window,
+                    kv_len=None)
+    # decode mask: attend to positions <= pos (and window if configured)
+    K = k.shape[2]
+    H, D = q.shape[2], q.shape[3]
+    g = H // K
+    qg = q.reshape(B, 1, K, g, D)
+    kc = k.astype(q.dtype)  # cache may store fp8; compute in model dtype
+    vc = v.astype(q.dtype)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
+                        preferred_element_type=jnp.float32) / math.sqrt(D)
+    k_pos = jnp.arange(S_max)
+    m = k_pos <= pos
+    if cfg.sliding_window:
+        m = m & (k_pos > pos - cfg.sliding_window)
+    logits = jnp.where(m[None, None, None, None, :], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vc.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vc).reshape(B, 1, -1)
+    y = dense_apply(p["wo"], out)
+    y = constrain(y, "act_batch", None, "act_embed")
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+# Faithful structure for the -Lite variant: no query compression; KV
+# compressed to a rank-`kv_lora` latent + a shared rotary key.  The decode
+# cache stores only (c_kv, k_rope): 512+64 per token vs 2·H·Dh = 4096 —
+# the paper-relevant point: ω_ā of MLA stages differs wildly from GQA.
+
+def mla_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, (H, dn + dr), dtype),
+        "wkv_a": dense_init(ks[1], d, r + dr, dtype),   # latent + shared k_rope
+        "kv_norm": {"scale": jnp.ones((r,), dtype)},
+        "wk_b": dense_init(ks[2], r, (H, dn), dtype),
+        "wv_b": dense_init(ks[3], r, (H, dv), dtype),
+        "wo": dense_init(ks[4], H * dv, d, dtype,
+                         scale=1.0 / math.sqrt(H * dv * max(cfg.num_layers, 1))),
+    }
+
+
+def mla_param_axes(cfg) -> Params:
+    return {
+        "wq": {"kernel": ("embed", "heads", None)},
+        "wkv_a": {"kernel": ("embed", "kv_lora")},
+        "kv_norm": {"scale": (None,)},
+        "wk_b": {"kernel": ("kv_lora", "heads", None)},
+        "wv_b": {"kernel": ("kv_lora", "heads", None)},
+        "wo": {"kernel": ("heads_merged", "embed")},
+    }
+
+
+def _mla_qkv(p: Params, cfg, x: jax.Array, positions: jax.Array):
+    from .common import rms_norm
+    dn = cfg.qk_nope_head_dim
+    q = dense_apply(p["wq"], x)                              # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = dense_apply(p["wkv_a"], x)                          # (B,S,r+dr)
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope  # k_rope: (B,S,1,dr)
+
+
+def _mla_block(p, cfg, qn_blk, qr_blk, c_kv, k_rope, q0, spec: MaskSpec):
+    """Latent-space attention for one q block (absorbed-W_kb trick)."""
+    B, bq = qn_blk.shape[:2]
+    S = c_kv.shape[1]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", qn_blk,
+                       p["wk_b"]["kernel"].astype(qn_blk.dtype))
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsod->bhqs", qr_blk, k_rope,
+                           preferred_element_type=jnp.float32))
+    logits = logits / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_pos = q0 + jnp.arange(bq)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = spec.block(q_pos, k_pos)
+    logits = jnp.where(mask[None, None], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)          # latent context
+    return jnp.einsum("bqhr,rhd->bqhd", ctx,
+                      p["wv_b"]["kernel"].astype(ctx.dtype))
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, spec: MaskSpec,
+                block_q: int = 512):
+    B, Sq = q_nope.shape[:2]
+    if Sq <= DIRECT_ATTEND_MAX:
+        out = _mla_block(p, cfg, q_nope, q_rope, c_kv, k_rope, 0, spec)
+        return dense_apply(p["wo"], out.reshape(B, Sq, -1))
+    block_q = min(block_q, Sq)
+    pad = (-Sq) % block_q
+    if pad:
+        q_nope = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = q_nope.shape[1] // block_q
+
+    def split(t):
+        return t.reshape(B, nb, block_q, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    def body(_, inp):
+        qn, qr, i = inp
+        return None, _mla_block(p, cfg, qn, qr, c_kv, k_rope, i * block_q,
+                                spec)
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           (split(q_nope), split(q_rope), jnp.arange(nb)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_q, -1)
+    return dense_apply(p["wo"], out[:, :Sq])
+
+
+def mla_apply(p: Params, cfg, x: jax.Array, positions: jax.Array,
+              spec: MaskSpec) -> jax.Array:
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    c_kv = constrain(c_kv, "act_batch", "act_seq", None)
+    y = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, spec,
+                    block_q=cfg.attn_block_q)
+    return constrain(y, "act_batch", "act_seq", "act_embed")
+
+
+def mla_prefill(p, cfg, x, positions, spec: MaskSpec):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    y = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, spec)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    B = x.shape[0]
+    S_max = cache["c_kv"].shape[1]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    c_kv = constrain(c_kv, "act_batch", "act_kv_seq", None)
+    ckc = c_kv.astype(x.dtype)   # cache may store fp8
+    krc = k_rope.astype(x.dtype)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope,
+                       p["wk_b"]["kernel"].astype(q_nope.dtype))
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckc,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsod->bhqs", q_rope, krc,
+                           preferred_element_type=jnp.float32))
+    logits = logits / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    m = jnp.arange(S_max) <= pos
+    logits = jnp.where(m[None, None, None, :], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(ckc.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, ckc)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx,
+                     p["wv_b"]["kernel"].astype(ctx.dtype))
+    y = dense_apply(p["wo"], out.reshape(B, 1, -1))
+    y = constrain(y, "act_batch", None, "act_embed")
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

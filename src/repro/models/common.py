@@ -1,0 +1,101 @@
+"""Shared layer primitives (pure-JAX, functional, init/apply pairs)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    # 2-sigma truncated normal, fan-in scaled
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32
+                                               ).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dims, dtype, use_bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p: Params = {"kernel": truncated_normal_init(key, (in_dim,) + out_dims,
+                                                 dtype, scale)}
+    if use_bias:
+        p["bias"] = jnp.zeros(out_dims, dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array) -> jax.Array:
+    """x: (..., in_dim) @ kernel: (in_dim, *out_dims) -> (..., *out_dims)."""
+    k = p["kernel"]
+    y = jax.lax.dot_general(
+        x, k.astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def rms_norm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int, offset: int = 0) -> jax.Array:
+    """MusicGen-style sinusoidal embeddings, (seq_len, dim), float32."""
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    emb = jnp.zeros((seq_len, dim), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb
+
+
+# -- losses -------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None,
+                          z_loss: float = 0.0) -> jax.Array:
+    """Token-mean xent; logits (B,S,V) any float dtype, labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,248 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in TPU-friendly
+chunked form, plus the O(1)-per-token recurrent decode path.
+
+The chunked SSD algorithm is the paper's "block decomposition": within-chunk
+terms are dense matmuls (MXU-friendly — this is the TPU adaptation of the
+CUDA kernel), across-chunk state is a short sequential scan over S/Q chunks.
+A Pallas kernel for the within-chunk part lives in ``repro.kernels.ssd``; the
+pure-jnp path below is its oracle and the default on CPU.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import dense_apply, dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim          # ssm heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = d_inner + 2 * G * N
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * d_inner + 2 * G * N + H     # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": dense_init(ks[3], d_inner, d, dtype,
+                               scale=1.0 / math.sqrt(d_inner * max(cfg.num_layers, 1))),
+    }
+
+
+def mamba2_param_axes(cfg) -> Params:
+    return {
+        "in_proj": {"kernel": ("embed", "mlp")},
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": {"scale": ("mlp",)},
+        "out_proj": {"kernel": ("mlp", "embed")},
+    }
+
+
+def _split_proj(cfg, proj: jax.Array):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_inner // cfg.ssm_head_dim
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + d_inner + 2 * G * N], axis=-1)
+    return z, xBC, dt  # dt: (..., H)
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xBC: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :].astype(xBC.dtype)
+              for i in range(K))
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{j < k <= i} x[..., k] (−inf for j > i)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: jax.Array | None = None,
+                use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.  x: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) (<0),
+    Bm/Cm: (B,S,G,N).  Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    if use_kernel:
+        from ..kernels.ssd import ops as ssd_ops
+        return ssd_ops.ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state)
+    B_, S, H, P = x.shape
+    if S % chunk:  # pad time so chunks divide evenly (dt=0 is a no-op step)
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, st = ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state)
+        return y[:, :S], st
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    xr = x.reshape(B_, nc, chunk, H, P)
+    dtr = dt.reshape(B_, nc, chunk, H)
+    Br = jnp.repeat(Bm.reshape(B_, nc, chunk, G, N), rep, axis=3)  # (B,nc,Q,H,N)
+    Cr = jnp.repeat(Cm.reshape(B_, nc, chunk, G, N), rep, axis=3)
+
+    dA = dtr * A[None, None, None, :]                    # (B,nc,Q,H) (negative)
+    dA_cs = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    # 1) within-chunk (diagonal blocks): dense matmuls
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cr, Br,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, L.astype(jnp.float32),
+                        dtr.astype(jnp.float32),
+                        xr.astype(jnp.float32))
+    # 2) chunk states: contribution of each chunk to its final state
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Br.astype(jnp.float32), decay_states.astype(jnp.float32),
+                        dtr.astype(jnp.float32), xr.astype(jnp.float32))
+    # 3) inter-chunk recurrence over nc chunks (sequential scan)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def step(carry, inp):
+        st_in, dec, pos = carry, inp[0], inp[1]
+        new = st_in * dec[:, :, None, None] + pos
+        return new, st_in                                # emit state *entering* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, init_state.astype(jnp.float32),
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,P,N)
+    # 4) contribution of the incoming state to each position
+    state_decay = jnp.exp(dA_cs)                          # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cr.astype(jnp.float32), prev_states,
+                       state_decay.astype(jnp.float32))
+    y = (y_diag + y_off).reshape(B_, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_apply(p: Params, cfg, x: jax.Array) -> jax.Array:
+    """Full-sequence forward (training / prefill)."""
+    B, S, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_inner // cfg.ssm_head_dim
+    proj = dense_apply(p["in_proj"], x)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xs = constrain(xs.reshape(B, S, H, cfg.ssm_head_dim),
+                   "act_batch", "act_seq", "act_ssm_heads", None)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                       use_kernel=cfg.use_ssd_kernel)
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y)
+    return constrain(out, "act_batch", "act_seq", "act_embed")
+
+
+def mamba2_prefill(p: Params, cfg, x: jax.Array
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward that also returns the recurrent decode cache."""
+    B, S, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_inner // cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    proj = dense_apply(p["in_proj"], x)
+    z, xBC_raw, dt = _split_proj(cfg, proj)
+    # conv cache = last K-1 *raw* xBC inputs
+    pad_raw = jnp.pad(xBC_raw, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))
+    conv_cache = pad_raw[:, -(K - 1):, :]
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                 use_kernel=cfg.use_ssd_kernel)
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = rms_norm(p["norm"], y.reshape(B, S, d_inner) * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y)
+    return out, {"conv": conv_cache, "ssm": final_state}
+
+
+# -- decode -------------------------------------------------------------------
+
+def mamba2_init_cache(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array]
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent step. x: (B,1,d)."""
+    B, _, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_inner // cfg.ssm_head_dim
+    proj = dense_apply(p["in_proj"], x)[:, 0]            # (B, d_proj)
+    z, xBC, dt = _split_proj(cfg, proj)
+    # conv over the window [cache, new]
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(xBC.dtype)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, w) + p["conv_b"].astype(xBC.dtype))
+    new_conv = win[:, 1:]
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, H, cfg.ssm_head_dim)
+    Bm = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1)  # (B,H,N)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None])                         # (B,H)
+    st = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", st, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + xs * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B, d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y)[:, None, :]       # (B,1,d)
+    return constrain(out, "act_batch", None, "act_embed"), \
+        {"conv": new_conv, "ssm": st}

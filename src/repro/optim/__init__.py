@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedules import cosine_schedule, linear_warmup_cosine

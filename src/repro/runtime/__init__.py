@@ -1,0 +1,2 @@
+from .train_loop import TrainLoopConfig, run_training
+from .serve_loop import ServeLoopConfig, run_serving

@@ -1,0 +1,64 @@
+"""Batched serving loop: prefill a batch of prompts, then greedy-decode with
+a jitted one-token step (continuous-batching-lite: finished sequences keep
+decoding into padding; a real deployment would swap in new requests — the
+slot bookkeeping below is where that plugs in)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm import StagedLM
+
+
+@dataclasses.dataclass
+class ServeLoopConfig:
+    max_new_tokens: int = 16
+    max_len: int = 256
+    greedy: bool = True
+    eos_id: Optional[int] = None
+
+
+def run_serving(cfg, params, prompts: np.ndarray, loop: ServeLoopConfig,
+                model: Optional[StagedLM] = None) -> Dict[str, Any]:
+    """prompts: (B, S0) int32 token batch. Returns generations + stats."""
+    model = model or StagedLM(cfg)
+    B, S0 = prompts.shape
+    assert S0 + loop.max_new_tokens <= loop.max_len
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=loop.max_len))
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens: List[np.ndarray] = [np.asarray(next_tok)]
+    done = np.zeros((B,), bool)
+    t0 = time.perf_counter()
+    for _ in range(loop.max_new_tokens - 1):
+        logits, cache = decode(params, cache, next_tok[:, None])
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        toks = np.asarray(next_tok)
+        if loop.eos_id is not None:
+            done |= toks == loop.eos_id
+            if done.all():
+                out_tokens.append(toks)
+                break
+        out_tokens.append(toks)
+    jax.block_until_ready(next_tok)
+    t_decode = time.perf_counter() - t0
+    gen = np.stack(out_tokens, axis=1)
+    n_decoded = max(gen.shape[1] - 1, 1)
+    return {
+        "generations": gen,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tokens_per_s": B * n_decoded / max(t_decode, 1e-9),
+    }

@@ -1,0 +1,152 @@
+"""Production training loop: rotor-planned remat, checkpoint/restart,
+straggler watchdog, deterministic data resume, optional int8 gradient
+compression on the DP axes.
+
+This is the same driver for a 1-chip CPU run and a 512-chip pod run — only
+the mesh differs; every sharding flows from the logical-axis rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt.manager import CheckpointManager
+from ..core.rematerialize import count_checkpoint_scopes
+from ..data.pipeline import SyntheticLMData
+from ..distributed.fault_tolerance import StragglerWatchdog
+from ..distributed.sharding import DEFAULT_RULES, axis_rules, spec_for
+from ..launch.steps import (batch_axes, make_train_step, opt_axes,
+                            plan_rotor_tree, shard_tree, sharding_of)
+from ..models.lm import StagedLM
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..optim.schedules import linear_warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    lr: float = 3e-4
+    warmup: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    async_ckpt: bool = True
+    log_every: int = 10
+    policy: Optional[str] = None        # remat policy override
+    grad_accum: int = 1                 # microbatch accumulation factor
+    straggler_threshold: float = 3.0
+    data_host_count: int = 1
+    data_host_index: int = 0
+
+
+def run_training(cfg, loop: TrainLoopConfig, mesh=None,
+                 log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
+    """Train a StagedLM; returns final metrics + state handles."""
+    from ..configs.shapes import ShapeSpec, input_specs
+
+    model = StagedLM(cfg)
+    mesh = mesh or jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    rules = DEFAULT_RULES
+    opt_cfg = AdamWConfig(lr=loop.lr)
+    lr_fn = linear_warmup_cosine(loop.lr, loop.warmup, loop.steps)
+
+    shape = ShapeSpec("train", "train", loop.seq_len, loop.global_batch)
+    with axis_rules(mesh, rules):
+        batch_specs = input_specs(cfg, shape)
+        tree, chain = plan_rotor_tree(model, batch_specs, mesh, rules,
+                                      loop.policy)
+        if tree is not None:
+            log_fn(f"[rotor] plan: {count_checkpoint_scopes(tree)} checkpoint "
+                   f"scopes over {model.n_stages()} stages")
+        step_fn = jax.jit(make_train_step(model, opt_cfg, tree, lr_fn,
+                                          grad_accum=loop.grad_accum),
+                          donate_argnums=(0, 1))
+
+        params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(loop.seed))
+        p_shard = sharding_of(shard_tree(params_spec, model.param_axes(),
+                                         mesh, rules))
+        o_spec = jax.eval_shape(adamw_init, params_spec)
+        o_shard = sharding_of(shard_tree(o_spec, opt_axes(model.param_axes()),
+                                         mesh, rules))
+        b_shard = sharding_of(shard_tree(batch_specs,
+                                         batch_axes(cfg, "train"), mesh, rules))
+
+        manager = (CheckpointManager(loop.ckpt_dir, keep=loop.ckpt_keep)
+                   if loop.ckpt_dir else None)
+        start_step = 0
+        if manager is not None and manager.latest_step() is not None:
+            target = {"params": params_spec, "opt": o_spec,
+                      "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            shards = {"params": p_shard, "opt": o_shard, "step": None}
+            s, state = manager.restore(target, shardings=shards)
+            params, opt_state = state["params"], state["opt"]
+            start_step = int(state["step"]) + 1
+            log_fn(f"[ckpt] restored step {s}; resuming at {start_step}")
+        else:
+            params = jax.jit(model.init, out_shardings=p_shard)(
+                jax.random.PRNGKey(loop.seed))
+            opt_state = jax.jit(adamw_init, out_shardings=o_shard)(params)
+
+        data = SyntheticLMData(cfg, loop.global_batch, loop.seq_len,
+                               seed=loop.seed,
+                               host_index=loop.data_host_index,
+                               host_count=loop.data_host_count)
+        data.start(from_step=start_step)
+        watchdog = StragglerWatchdog(threshold=loop.straggler_threshold)
+        losses = []
+        t_begin = time.perf_counter()
+        step = start_step
+        try:
+            for step in range(start_step, loop.steps):
+                watchdog.step_begin()
+                host_batch = data.next()
+                batch = jax.tree.map(
+                    lambda arr, shd: jax.device_put(arr, shd),
+                    host_batch, b_shard)
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.asarray(step, jnp.int32))
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                ev = watchdog.step_end(step)
+                if ev is not None:
+                    log_fn(f"[watchdog] straggler at step {ev.step}: "
+                           f"{ev.duration:.2f}s vs median {ev.median:.2f}s")
+                if watchdog.should_restart:
+                    log_fn("[watchdog] persistent straggler — checkpointing "
+                           "for restart")
+                    if manager is not None:
+                        manager.save(step, {"params": params, "opt": opt_state,
+                                            "step": jnp.asarray(step, jnp.int32)},
+                                     blocking=True)
+                    break
+                if step % loop.log_every == 0:
+                    log_fn(f"step {step:5d} loss {loss:.4f} "
+                           f"gnorm {float(metrics['grad_norm']):.3f}")
+                if (manager is not None and loop.ckpt_every
+                        and step and step % loop.ckpt_every == 0):
+                    manager.save(step, {"params": params, "opt": opt_state,
+                                        "step": jnp.asarray(step, jnp.int32)},
+                                 blocking=not loop.async_ckpt)
+        finally:
+            data.stop()
+            if manager is not None:
+                manager.wait()
+        wall = time.perf_counter() - t_begin
+        if manager is not None:
+            manager.save(step, {"params": params, "opt": opt_state,
+                                "step": jnp.asarray(step, jnp.int32)},
+                         blocking=True)
+        tokens = loop.global_batch * loop.seq_len * max(len(losses), 1)
+        return {"losses": losses, "params": params, "opt_state": opt_state,
+                "last_step": step, "wall_s": wall,
+                "tokens_per_s": tokens / max(wall, 1e-9),
+                "straggler_events": len(watchdog.events)}

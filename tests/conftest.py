@@ -1,0 +1,9 @@
+import os
+
+# Tests must see 1 CPU device (the dry-run sets its own 512-device flag in a
+# subprocess); also keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,46 @@
+"""Shared test helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import Chain
+
+
+def random_chain(rng: np.random.Generator, max_len: int = 4,
+                 zero_overheads: bool = False) -> Chain:
+    L = int(rng.integers(1, max_len + 1))
+    n = L + 1
+    z = np.zeros(n)
+    return Chain.make(
+        uf=rng.integers(1, 5, n).astype(float),
+        ub=rng.integers(1, 5, n).astype(float),
+        wa=rng.integers(1, 4, n).astype(float),
+        wabar=rng.integers(1, 6, n).astype(float),
+        of=z if zero_overheads else rng.integers(0, 2, n).astype(float),
+        ob=z if zero_overheads else rng.integers(0, 2, n).astype(float),
+    )
+
+
+def make_mlp_chain(L: int, dims=None, seed: int = 0):
+    """L tanh-MLP stages + a mean-square loss stage; returns
+    (stages, params, x)."""
+    dims = dims or [8 + 2 * i for i in range(L + 1)]
+    key = jax.random.PRNGKey(seed)
+    params, stages = [], []
+    for i in range(L):
+        w = jax.random.normal(jax.random.fold_in(key, i),
+                              (dims[i], dims[i + 1])) * 0.3
+        params.append({"w": w, "b": jnp.zeros((dims[i + 1],))})
+        stages.append(lambda p, a: jnp.tanh(a @ p["w"] + p["b"]))
+    params.append({})
+    stages.append(lambda p, a: jnp.mean(a ** 2))
+    x = jax.random.normal(jax.random.fold_in(key, 999), (4, dims[0]))
+    return stages, params, x
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-7):
+    for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(u, dtype=np.float64),
+                                   np.asarray(v, dtype=np.float64),
+                                   rtol=rtol, atol=atol)

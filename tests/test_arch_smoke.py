@@ -1,0 +1,160 @@
+"""Per-arch smoke tests: reduced same-family configs run a real forward +
+train-step on CPU, asserting output shapes and finite values (assignment
+requirement (f))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models.lm import StagedLM
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.modality == "text":
+        return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.modality == "audio_embed":
+        return {"embeds": jax.random.normal(key, (B, S, cfg.d_model)),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                "loss_mask": jnp.ones((B, S), jnp.float32)}
+    P = cfg.prefix_len
+    return {"image_embeds": jax.random.normal(key, (B, P, cfg.d_model)),
+            "tokens": jax.random.randint(key, (B, S - P), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, S - P), 0, cfg.vocab_size),
+            "loss_mask": jnp.ones((B, S - P), jnp.float32)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss = model.loss_fn(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # one full optimizer step
+    grads = jax.grad(lambda p: model.loss_fn(p, batch))(params)
+    opt = adamw_init(params)
+    new_p, new_o, metrics = adamw_update(AdamWConfig(lr=1e-3), grads, opt,
+                                         params)
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_p)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_loss_decreases_under_training(arch):
+    """A few steps on a fixed batch must reduce the loss (learning sanity)."""
+    cfg = smoke_config(arch)
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, batch)
+        p2, o2, _ = adamw_update(ocfg, g, opt, params)
+        return p2, o2, loss
+
+    losses = []
+    for _ in range(8):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_forward(arch):
+    """Greedy decode with the KV/SSM cache must reproduce full-forward
+    logits position by position (prefill + N decode steps vs one forward).
+
+    MoE capacity is raised so no tokens are dropped: capacity-based routing
+    legitimately drops different tokens at different batch shapes, which is
+    a serving-vs-training semantic difference, not a bug."""
+    cfg = smoke_config(arch, moe_capacity_factor=16.0)
+    if cfg.modality == "vlm":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, modality="text", prefix_len=0)
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S0, N = 2, 8, 4
+    key = jax.random.PRNGKey(2)
+    if cfg.modality == "audio_embed":
+        full_in = jax.random.normal(key, (B, S0 + N, cfg.d_model))
+        batch0 = {"embeds": full_in[:, :S0]}
+    else:
+        full_in = jax.random.randint(key, (B, S0 + N), 0, cfg.vocab_size)
+        batch0 = {"tokens": full_in[:, :S0]}
+
+    # reference: full forward logits
+    if cfg.modality == "audio_embed":
+        ref_logits = model.forward_logits(params, {"embeds": full_in})
+    else:
+        ref_logits = model.forward_logits(params, {"tokens": full_in})
+
+    logits, cache = model.prefill(params, batch0, max_len=S0 + N)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(ref_logits[:, S0 - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(N):
+        tok = (full_in[:, S0 + t][:, None] if cfg.modality != "audio_embed"
+               else full_in[:, S0 + t][:, None, :])
+        logits, cache = model.decode_step(params, cache, tok)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(ref_logits[:, S0 + t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_rotor_loss_matches_plain(arch):
+    """The rotor execution path gives bitwise-same loss as the plain path."""
+    from repro.core.rematerialize import full_remat_tree
+    cfg = smoke_config(arch)
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    plain = model.loss_fn(params, batch)
+    L = model.n_stages() - 1
+    tree = full_remat_tree(L)
+    remat = model.loss_fn(params, batch, tree=tree)
+    np.testing.assert_allclose(float(plain), float(remat), rtol=1e-6)
+    g1 = jax.grad(lambda p: model.loss_fn(p, batch))(params)
+    g2 = jax.grad(lambda p: model.loss_fn(p, batch, tree=tree))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_full_configs_construct():
+    """The 40-cell full configs build and report sane parameter counts."""
+    from repro.configs import get_config
+    expected_params = {
+        "codeqwen1.5-7b": (6e9, 9e9),
+        "qwen1.5-4b": (3e9, 5e9),
+        "starcoder2-7b": (6e9, 9e9),
+        "qwen1.5-110b": (90e9, 130e9),
+        "musicgen-medium": (1e9, 2.5e9),
+        "paligemma-3b": (2e9, 4e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        # the assignment sheet pins 48L×64e for moonshot (HF Moonlight has
+        # 27L); at the sheet's dims the total is ~28B — we follow the sheet
+        "moonshot-v1-16b-a3b": (12e9, 30e9),
+        "mamba2-1.3b": (0.9e9, 2e9),
+        "zamba2-2.7b": (2e9, 4e9),
+    }
+    for arch, (lo, hi) in expected_params.items():
+        cfg = get_config(arch)
+        n = cfg.total_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo},{hi}]"
+        assert cfg.active_params() <= n

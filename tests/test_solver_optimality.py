@@ -1,0 +1,107 @@
+"""The paper's Theorem 1: the DP computes the optimal *persistent* schedule.
+
+Validated against exhaustive search (Dijkstra over the full Table-1 operation
+space) on random small heterogeneous chains, with exact slot discretization.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bruteforce import optimal_time
+from repro.core.chain import Chain
+from repro.core.schedule import Schedule, simulate
+from repro.core.solver import solve_min_memory, solve_optimal, tree_to_schedule
+
+from helpers import random_chain
+
+
+def _check_chain(ch: Chain, fracs=(0.5, 0.75, 1.0)):
+    sa = simulate(ch, Schedule.store_all(ch.length))
+    assert sa.valid
+    for frac in fracs:
+        m = float(math.ceil(sa.peak_mem * frac))
+        sol = solve_optimal(ch, m, num_slots=int(m))  # slot size exactly 1
+        bf = optimal_time(ch, m + 1e-6, persistent_only=True)
+        if not sol.feasible:
+            assert not np.isfinite(bf), (
+                f"DP infeasible but brute force found {bf}")
+            continue
+        res = simulate(ch, sol.schedule, m + 1e-6)
+        assert res.valid, res.error
+        # predicted time == simulated time (the model is exact)
+        assert abs(res.time - sol.expected_time) < 1e-9
+        # tree flattening reproduces the same schedule semantics
+        res2 = simulate(ch, tree_to_schedule(sol.tree, ch.length), m + 1e-6)
+        assert res2.valid and abs(res2.time - res.time) < 1e-9
+        # optimality among persistent schedules
+        assert abs(sol.expected_time - bf) < 1e-9, (
+            f"DP={sol.expected_time} vs brute-force={bf} at m={m}")
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_dp_matches_bruteforce_random(seed):
+    rng = np.random.default_rng(seed)
+    _check_chain(random_chain(rng, max_len=4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 4), min_size=2, max_size=4),
+       st.lists(st.integers(1, 5), min_size=2, max_size=4),
+       st.lists(st.integers(1, 3), min_size=2, max_size=4))
+def test_dp_matches_bruteforce_hypothesis(uf, wabar, wa):
+    n = min(len(uf), len(wabar), len(wa))
+    ch = Chain.make(uf=uf[:n], ub=[1.0] * n, wa=wa[:n], wabar=wabar[:n])
+    _check_chain(ch, fracs=(0.6, 1.0))
+
+
+def test_monotone_in_memory():
+    """C_BP(1, L+1, m) is non-increasing in m."""
+    rng = np.random.default_rng(3)
+    ch = random_chain(rng, max_len=4)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    prev = np.inf
+    for m in range(2, int(peak) + 2):
+        sol = solve_optimal(ch, float(m), num_slots=m)
+        if sol.feasible:
+            assert sol.expected_time <= prev + 1e-9
+            prev = sol.expected_time
+    assert np.isfinite(prev)
+
+
+def test_large_memory_recovers_store_all():
+    ch = Chain.homogeneous(6)
+    sol = solve_optimal(ch, 1000.0, num_slots=500)
+    assert sol.feasible
+    ideal = float(ch.uf.sum() + ch.ub.sum())
+    assert abs(sol.expected_time - ideal) < 1e-9
+
+
+def test_solve_min_memory():
+    rng = np.random.default_rng(7)
+    ch = random_chain(rng, max_len=4)
+    sol = solve_min_memory(ch, num_slots=200)
+    assert sol.feasible
+    res = simulate(ch, sol.schedule, sol.mem_limit * (1 + 1e-6))
+    assert res.valid, res.error
+    # a budget meaningfully below the reported minimum must be infeasible
+    slot = sol.mem_limit / sol.num_slots
+    tight = solve_optimal(ch, sol.mem_limit - 3 * slot, num_slots=200)
+    assert (not tight.feasible) or tight.expected_time >= sol.expected_time - 1e-9
+
+
+def test_revolve_never_beats_optimal():
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        ch = random_chain(rng, max_len=4)
+        peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+        for frac in (0.6, 0.9):
+            m = math.ceil(peak * frac)
+            full = solve_optimal(ch, float(m), num_slots=int(m))
+            rev = solve_optimal(ch, float(m), num_slots=int(m),
+                                allow_fall=False)
+            if rev.feasible:
+                assert full.feasible
+                assert full.expected_time <= rev.expected_time + 1e-9
