@@ -1,0 +1,156 @@
+"""Three-tier storage benchmark: time vs *device* memory budget on the
+paper's ResNet-style chain, with the host tier priced by the measured
+device↔host copy bandwidth.
+
+Compares, per device budget:
+
+- **optimal**  — the paper's two-tier DP (``solve_optimal``),
+- **revolve**  — the AD-model comparator (activations-only checkpoints),
+- **optimal_offload** — the three-tier DP (``repro.offload``), which stays
+  feasible *below* the two-tier ``solve_min_memory`` floor and matches the
+  two-tier schedule wherever PCIe can't pay for itself.
+
+Also asserts the subsystem's exactness claim: the offload simulator's
+makespan equals the offload DP's predicted makespan on every feasible point.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (Schedule, execute_schedule, measure_host_bandwidth,
+                        profile_stages_measured, simulate, solve_optimal)
+from repro.core.solver import solve_min_memory
+from repro.offload.solver import solve_min_device_memory, solve_optimal_offload
+
+from .chains import resnet_ish_chain
+
+
+def run_chain(name: str, stages, params, x,
+              budgets=(0.15, 0.2, 0.25, 0.3, 0.4, 0.55, 0.7, 0.85, 1.0),
+              num_slots: int = 300, emit=print) -> Dict:
+    host = measure_host_bandwidth()
+    chain = profile_stages_measured(stages, params, x, repeats=1, host=host)
+    store_all = simulate(chain, Schedule.store_all(chain.length))
+    floor2 = solve_min_memory(chain, num_slots=num_slots)
+    floor3 = solve_min_device_memory(chain, num_slots=num_slots)
+    emit(f"# {name}: host link d2h {host.bandwidth_d2h/1e9:.2f} GB/s, "
+         f"h2d {(host.bandwidth_h2d or host.bandwidth_d2h)/1e9:.2f} GB/s")
+    emit(f"# {name}: store-all peak {store_all.peak_mem:.3e} B; two-tier "
+         f"floor {floor2.mem_limit:.3e} B; three-tier device floor "
+         f"{floor3.mem_limit:.3e} B "
+         f"({floor3.mem_limit / floor2.mem_limit:.2f}x)")
+
+    rows: List[dict] = []
+    mismatches = 0
+    below_floor_feasible = 0
+    emit("chain,strategy,budget_frac,budget_bytes,predicted_s,sim_peak_dev,"
+         "sim_host_peak,transfer_stall_s,n_offloads")
+
+    def row(strategy, frac, budget, sol):
+        nonlocal mismatches
+        sim = simulate(chain, sol.schedule, budget * (1 + 1e-9))
+        assert sim.valid, f"{strategy}@{frac}: {sim.error}"
+        if abs(sim.time - sol.expected_time) > 1e-9 * max(1.0, sim.time):
+            mismatches += 1
+        n_off = sol.schedule.count("Foff")
+        r = dict(chain=name, strategy=strategy, budget_frac=frac,
+                 budget=budget, predicted_s=sol.expected_time,
+                 peak_dev=sim.peak_mem, host_peak=sim.host_peak_mem,
+                 stall=sim.transfer_stall, n_offloads=n_off, solution=sol)
+        rows.append(r)
+        emit(f"{name},{strategy},{frac:.2f},{budget:.3e},"
+             f"{sol.expected_time:.4f},{sim.peak_mem:.3e},"
+             f"{sim.host_peak_mem:.3e},{sim.transfer_stall:.4f},{n_off}")
+        return r
+
+    # probe the between-floors band explicitly: that is where the offload
+    # plan is feasible while *no* two-tier persistent schedule exists.
+    # (floors are reported at store-all-peak slot scale; solve_optimal at a
+    # given budget rediscretizes, so check infeasibility per-point.)
+    probe = [floor3.mem_limit + f * (floor2.mem_limit - floor3.mem_limit)
+             for f in (0.25, 0.5, 0.75)]
+    points = sorted({b / store_all.peak_mem for b in probe}
+                    | set(budgets))
+
+    gains = []
+    for frac in points:
+        budget = store_all.peak_mem * frac
+        sol3 = solve_optimal_offload(chain, budget, num_slots=num_slots)
+        sol2 = solve_optimal(chain, budget, num_slots=num_slots)
+        rev = solve_optimal(chain, budget, num_slots=num_slots,
+                            allow_fall=False)
+        if sol2.feasible:
+            row("optimal", frac, budget, sol2)
+        if rev.feasible:
+            row("revolve", frac, budget, rev)
+        if sol3.feasible:
+            row("optimal_offload", frac, budget, sol3)
+            if not sol2.feasible:
+                below_floor_feasible += 1
+            if sol2.feasible:
+                gains.append(sol2.expected_time / sol3.expected_time - 1.0)
+
+    gain = float(np.max(gains)) if gains else 0.0
+    emit(f"# {name}: offload feasible at {below_floor_feasible} budget "
+         f"point(s) below the two-tier floor; best equal-budget speedup "
+         f"over two-tier optimal {gain * 100:+.1f}%")
+    emit(f"# {name}: simulator-vs-DP makespan mismatches: {mismatches} "
+         f"(must be 0)")
+    return {"rows": rows, "mismatches": mismatches,
+            "below_floor_feasible": below_floor_feasible,
+            "floor2": floor2.mem_limit, "floor3": floor3.mem_limit,
+            "max_gain": gain}
+
+
+def wall_clock_point(stages, params, x, rows, emit=print, repeats=2) -> None:
+    """Wall-clock one offload-bearing schedule through the real executor
+    (``jax.device_put`` copies included) — the model's claim, measured."""
+    import time as _time
+
+    from repro.offload.executor import execute_offload_schedule
+    from repro.offload.host_buffer import HostBuffer
+
+    offl = [r for r in rows if r["strategy"] == "optimal_offload"
+            and r["n_offloads"] > 0]
+    if not offl:
+        emit("# wall-clock: no offload-bearing point to run")
+        return
+    r = offl[0]
+    sol = r["solution"]
+    hb = HostBuffer()
+    out = execute_offload_schedule(sol.schedule, stages, params, x,
+                                   host_buffer=hb)  # warm caches
+    t0 = _time.perf_counter()
+    for _ in range(repeats):
+        out = execute_offload_schedule(sol.schedule, stages, params, x,
+                                       host_buffer=HostBuffer())
+    import jax
+    jax.block_until_ready(out[1])
+    wall = (_time.perf_counter() - t0) / repeats
+    emit(f"# wall-clock: offload schedule at budget_frac "
+         f"{r['budget_frac']:.2f}: {wall:.4f}s/iter (predicted model time "
+         f"{r['predicted_s']:.4f}s), host pool peak {hb.peak_bytes} B")
+
+
+def main(emit=print, small: bool = True):
+    stages, params, x = resnet_ish_chain(num_blocks=6 if small else 10,
+                                         image=24 if small else 32,
+                                         batch=4 if small else 8)
+    res = run_chain("resnet_ish", stages, params, x, emit=emit)
+    wall_clock_point(stages, params, x, res["rows"], emit=emit)
+    if res["mismatches"]:
+        raise AssertionError(
+            f"offload DP and simulator disagree on {res['mismatches']} points")
+    if not small:
+        fns, sp, batch_d = __import__(
+            "benchmarks.chains", fromlist=["transformer_chain"]
+        ).transformer_chain(num_layers=8, d_model=128, seq=128, batch=4)
+        run_chain("transformer", fns, sp, batch_d, emit=emit)
+    return res
+
+
+if __name__ == "__main__":
+    main()

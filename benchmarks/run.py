@@ -13,13 +13,14 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: tradeoff,solver,prediction,roofline,kernels")
+                    help="comma list: tradeoff,solver,prediction,roofline,"
+                         "kernels,offload")
     args = ap.parse_args(argv)
     small = not args.full
     which = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_kernels, bench_prediction, bench_roofline,
-                   bench_solver, bench_tradeoff)
+    from . import (bench_kernels, bench_offload, bench_prediction,
+                   bench_roofline, bench_solver, bench_tradeoff)
 
     benches = [
         ("tradeoff", bench_tradeoff, "paper Figs 3-13: throughput vs memory"),
@@ -27,6 +28,8 @@ def main(argv=None) -> None:
         ("prediction", bench_prediction, "paper §5.3: model-vs-measured error"),
         ("roofline", bench_roofline, "§Roofline: dry-run roofline table"),
         ("kernels", bench_kernels, "kernel micro-bench"),
+        ("offload", bench_offload,
+         "three-tier: time vs device budget with host offload"),
     ]
     for name, mod, desc in benches:
         if which and name not in which:

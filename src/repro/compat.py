@@ -1,0 +1,31 @@
+"""Small cross-version JAX compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (replication check
+flag ``check_rep``) to ``jax.shard_map`` (flag ``check_vma``); ``shard_map``
+here accepts ``check=False``-style usage via :data:`SHARD_MAP_CHECK_KW`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    SHARD_MAP_CHECK_KW = "check_vma"
+else:  # pragma: no cover - exercised on jax<=0.4 only
+    from jax.experimental.shard_map import shard_map  # type: ignore
+    SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map_unchecked(fn, **kwargs):
+    """``shard_map`` with the per-version replication check disabled."""
+    return shard_map(fn, **kwargs, **{SHARD_MAP_CHECK_KW: False})
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict across jaxlib versions
+    (older jaxlibs return a list with one dict per module)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return ca or {}

@@ -2,8 +2,9 @@
 checkpointing (rotor) — cost model, DP solver, baselines, simulator, and the
 two execution paths (nested-remat compiler and faithful eager executor)."""
 
-from .chain import Chain, DiscreteChain
-from .schedule import Schedule, SimResult, assert_valid, simulate
+from .chain import Chain, DiscreteChain, HostTransferModel
+from .schedule import (Schedule, SimResult, assert_valid, simulate,
+                       uses_offload)
 from .solver import (AllNode, CkNode, Leaf, Solution, Tree, solve_optimal,
                      tree_to_schedule)
 from .baselines import best_periodic, chen_sqrt, periodic, revolve
@@ -11,17 +12,19 @@ from .rematerialize import (build_remat_fn, count_checkpoint_scopes,
                             full_remat_tree, periodic_tree, sequential_tree,
                             tree_stage_span)
 from .executor import execute_schedule, reference_grads
-from .planner import (profile_stages_analytic, profile_stages_measured,
-                      residual_bytes)
-from .policies import make_policy_tree, parse_budget
+from .planner import (measure_host_bandwidth, profile_stages_analytic,
+                      profile_stages_measured, residual_bytes)
+from .policies import (PolicyPlan, make_policy_plan, make_policy_tree,
+                       parse_budget)
 
 __all__ = [
-    "Chain", "DiscreteChain", "Schedule", "SimResult", "simulate",
-    "assert_valid", "solve_optimal", "tree_to_schedule", "Solution", "Tree",
-    "Leaf", "AllNode", "CkNode", "periodic", "chen_sqrt", "revolve",
-    "best_periodic", "build_remat_fn", "sequential_tree", "full_remat_tree",
-    "periodic_tree", "tree_stage_span", "count_checkpoint_scopes",
-    "execute_schedule", "reference_grads", "profile_stages_analytic",
-    "profile_stages_measured", "residual_bytes", "make_policy_tree",
-    "parse_budget",
+    "Chain", "DiscreteChain", "HostTransferModel", "Schedule", "SimResult",
+    "simulate", "uses_offload", "assert_valid", "solve_optimal",
+    "tree_to_schedule", "Solution", "Tree", "Leaf", "AllNode", "CkNode",
+    "periodic", "chen_sqrt", "revolve", "best_periodic", "build_remat_fn",
+    "sequential_tree", "full_remat_tree", "periodic_tree", "tree_stage_span",
+    "count_checkpoint_scopes", "execute_schedule", "reference_grads",
+    "measure_host_bandwidth", "profile_stages_analytic",
+    "profile_stages_measured", "residual_bytes", "PolicyPlan",
+    "make_policy_plan", "make_policy_tree", "parse_budget",
 ]

@@ -38,11 +38,64 @@ import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
+class HostTransferModel:
+    """Cost model of the device↔host link (the third storage tier).
+
+    Transfers are modelled as asynchronous DMA copies on an uncontended link:
+    a transfer launched at time ``t`` completes at ``t + latency + bytes/bw``
+    regardless of what the compute stream does, so offloads *overlap* with
+    compute and only stall the timeline when a dependent op (a ``Prefetch``)
+    reaches the data before the copy has landed.
+
+    Bandwidths are in (size units)/second — bytes/s when the chain is profiled
+    in bytes, matching ``Chain.wa``.  ``bandwidth_h2d`` defaults to the
+    device→host value (full-duplex symmetric link, e.g. PCIe).  A zero
+    ``bandwidth_d2h`` disables the tier entirely (transfers take forever);
+    solvers fall back to the two-tier model.
+    """
+
+    bandwidth_d2h: float                  # device → host, size-units / s
+    bandwidth_h2d: float | None = None    # host → device (default: = d2h)
+    latency: float = 0.0                  # fixed per-transfer cost, seconds
+
+    def __post_init__(self):
+        if self.bandwidth_d2h < 0 or (self.bandwidth_h2d or 0) < 0:
+            raise ValueError("host bandwidth must be non-negative")
+        if self.latency < 0:
+            raise ValueError("host latency must be non-negative")
+
+    @property
+    def enabled(self) -> bool:
+        return self.bandwidth_d2h > 0
+
+    def offload_time(self, size: float) -> float:
+        """Seconds for a device→host copy of ``size`` units (inf if disabled)."""
+        if not self.enabled:
+            return float("inf")
+        return self.latency + float(size) / self.bandwidth_d2h
+
+    def prefetch_time(self, size: float) -> float:
+        """Seconds for a host→device copy of ``size`` units (inf if disabled)."""
+        bw = self.bandwidth_h2d if self.bandwidth_h2d else self.bandwidth_d2h
+        if not bw or bw <= 0:
+            return float("inf")
+        return self.latency + float(size) / bw
+
+    @staticmethod
+    def pcie_gen3() -> "HostTransferModel":
+        """Effective PCIe 3.0 x16 pinned-memory throughput (~12 GB/s)."""
+        return HostTransferModel(bandwidth_d2h=12e9)
+
+
+@dataclasses.dataclass(frozen=True)
 class Chain:
     """Cost description of a heterogeneous backprop chain of length L.
 
     ``length`` is the number of real stages L; internal arrays have L+1
     entries, the last describing the loss stage F^{L+1}/B^{L+1}.
+
+    ``host`` (optional) prices the third storage tier — asynchronous
+    activation offload to host RAM; ``None`` means the two-tier model.
     """
 
     uf: np.ndarray      # (L+1,) forward times, stage 1..L+1
@@ -52,6 +105,7 @@ class Chain:
     wdelta: np.ndarray  # (L+1,) sizes of δ^0 .. δ^L
     of: np.ndarray      # (L+1,) fwd memory overheads, stage 1..L+1
     ob: np.ndarray      # (L+1,) bwd memory overheads, stage 1..L+1
+    host: "HostTransferModel | None" = None
 
     @property
     def length(self) -> int:
@@ -79,6 +133,7 @@ class Chain:
         wdelta: Sequence[float] | None = None,
         of: Sequence[float] | None = None,
         ob: Sequence[float] | None = None,
+        host: "HostTransferModel | None" = None,
     ) -> "Chain":
         uf = np.asarray(uf, dtype=np.float64)
         n = len(uf)
@@ -97,6 +152,7 @@ class Chain:
             wdelta=wdelta_,
             of=arr(of, z),
             ob=arr(ob, z),
+            host=host,
         )
 
     @staticmethod
@@ -111,6 +167,22 @@ class Chain:
         return Chain.make(ufs, ubs, was, wabars)
 
     # -- utilities ---------------------------------------------------------
+
+    def with_host(self, host: "HostTransferModel | None") -> "Chain":
+        """A copy of this chain priced with the given host-transfer model."""
+        return dataclasses.replace(self, host=host)
+
+    def offload_times(self) -> np.ndarray:
+        """Per-activation device→host copy time: entry ``i`` is ``a^i``."""
+        if self.host is None:
+            return np.full(len(self.wa), np.inf)
+        return np.array([self.host.offload_time(w) for w in self.wa])
+
+    def prefetch_times(self) -> np.ndarray:
+        """Per-activation host→device copy time: entry ``i`` is ``a^i``."""
+        if self.host is None:
+            return np.full(len(self.wa), np.inf)
+        return np.array([self.host.prefetch_time(w) for w in self.wa])
 
     def discretize(self, mem_limit: float, num_slots: int) -> "DiscreteChain":
         """Discretize memory sizes into ``num_slots`` slots of size

@@ -18,21 +18,12 @@ production path is ``rematerialize.build_remat_fn`` (nested remat under jit).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule
-
-
-def _tree_bytes(tree: Any) -> int:
-    total = 0
-    for leaf in jax.tree.leaves(tree):
-        nb = getattr(leaf, "nbytes", None)
-        if nb is not None:
-            total += int(nb)
-    return total
+from .schedule import Schedule
 
 
 def execute_schedule(
@@ -55,66 +46,15 @@ def execute_schedule(
     op) — real array memory, the paper's memory claim measured rather than
     modeled.  The vjp closures' pytree leaves *are* the residual tensors
     (``ā``), so this observes exactly what the Table-1 model accounts.
+
+    The op walker itself lives in ``repro.offload.executor`` — a strict
+    superset of the Table-1 op set (it adds ``Foff``/``Prefetch``); this
+    wrapper keeps the classic two-tier entry point and contract.
     """
-    L = schedule.length
-    acts: Dict[int, Any] = {0: x}          # bare a^i values
-    vjps: Dict[int, Any] = {}              # ā^l  (vjp closures)
-    outs: Dict[int, Any] = {}              # stage outputs recorded by F_all
-    deltas: Dict[int, Any] = {}
-    grads: List[Any] = [None] * (L + 1)
-    final_out = None
-    peak_live = 0
-
-    def get_act(i: int):
-        if i in acts:
-            return acts[i]
-        if i in outs:  # a^i readable from ā^i (Table 1, second line)
-            return outs[i]
-        raise RuntimeError(f"a^{i} not available — invalid schedule")
-
-    for kind, l in schedule.ops:
-        if kind in (F_NONE, F_CK, F_ALL):
-            a_in = get_act(l - 1)
-            if kind == F_ALL:
-                out, vjp_fn = jax.vjp(stages[l - 1], params[l - 1], a_in)
-                vjps[l] = vjp_fn
-                outs[l] = out
-                if l == L + 1:
-                    final_out = out
-            else:
-                out = stages[l - 1](params[l - 1], a_in)
-                acts[l] = out
-                if l == L + 1:
-                    final_out = out
-            if kind == F_NONE:
-                acts.pop(l - 1, None)
-        elif kind == BWD:
-            if l == L + 1:
-                out = outs[l]
-                if loss_cotangent is not None:
-                    delta = loss_cotangent
-                else:
-                    delta = jax.tree.map(lambda o: jnp.ones_like(o), out)
-            else:
-                delta = deltas.pop(l)
-            dparams, da = vjps.pop(l)(delta)
-            outs.pop(l, None)
-            grads[l - 1] = dparams if grads[l - 1] is None else jax.tree.map(
-                jnp.add, grads[l - 1], dparams)
-            deltas[l - 1] = da
-            acts.pop(l - 1, None)  # B^l consumes a^{l-1}
-        else:
-            raise ValueError(f"executor cannot run op kind {kind}")
-        if track_live_bytes:
-            live = (_tree_bytes(acts) + _tree_bytes(vjps) + _tree_bytes(outs)
-                    + _tree_bytes(deltas))
-            peak_live = max(peak_live, live)
-
-    if 0 not in deltas:
-        raise RuntimeError("schedule did not produce δ^0")
-    if track_live_bytes:
-        return final_out, grads, deltas[0], peak_live
-    return final_out, grads, deltas[0]
+    from ..offload.executor import execute_offload_schedule
+    return execute_offload_schedule(
+        schedule, stages, params, x, loss_cotangent=loss_cotangent,
+        track_live_bytes=track_live_bytes)
 
 
 def reference_grads(stages: Sequence[Callable], params: Sequence[Any], x: Any

@@ -27,10 +27,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .chain import Chain
+from .chain import Chain, HostTransferModel
 
 # TPU v5e-ish defaults; overridable.
 PEAK_FLOPS_BF16 = 197e12
+
+
+def measure_host_bandwidth(sample_bytes: int = 1 << 26, repeats: int = 3,
+                           latency: float = 1e-4) -> HostTransferModel:
+    """Measure the effective device↔host copy bandwidth (paper-§5.1 style:
+    wall-clock the actual operation).  Device→host is a forced ``np.asarray``
+    materialization, host→device a ``jax.device_put`` — both are real copies
+    on every backend, including CPU (where they time memcpy, the honest cost
+    of the 'host tier' there)."""
+    n = max(sample_bytes // 4, 1)
+    dev = jnp.ones((n,), jnp.float32)
+    jax.block_until_ready(dev)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        host = np.array(dev, copy=True)  # asarray may alias on CPU backends
+    t_d2h = (time.perf_counter() - t0) / repeats
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        back = jax.device_put(host)
+        jax.block_until_ready(back)
+    t_h2d = (time.perf_counter() - t0) / repeats
+    nbytes = n * 4
+    return HostTransferModel(
+        bandwidth_d2h=nbytes / max(t_d2h, 1e-12),
+        bandwidth_h2d=nbytes / max(t_h2d, 1e-12),
+        latency=latency)
 
 
 def _bytes_of(spec) -> int:
@@ -59,10 +85,8 @@ def residual_bytes(fn: Callable, p: Any, a: Any) -> int:
 
 
 def _flops_of(fn: Callable, *args) -> float:
-    compiled = jax.jit(fn).lower(*args).compile()
-    ca = compiled.cost_analysis()
-    if not ca:
-        return 0.0
+    from ..compat import cost_analysis_dict
+    ca = cost_analysis_dict(jax.jit(fn).lower(*args).compile())
     return float(ca.get("flops", 0.0))
 
 
@@ -74,6 +98,7 @@ def profile_stages_analytic(
     activation_shard_factor: float = 1.0,
     flops_fwd: Optional[Sequence[float]] = None,
     flops_bwd: Optional[Sequence[float]] = None,
+    host: Optional[HostTransferModel] = None,
 ) -> Chain:
     """Build the chain cost model without executing anything.
 
@@ -108,7 +133,7 @@ def profile_stages_analytic(
             wa.append(_pytree_bytes(out_spec) / activation_shard_factor)
         a = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), out_spec) \
             if flops_fwd is None else out_spec
-    return Chain.make(uf=uf, ub=ub, wa=wa, wabar=wabar)
+    return Chain.make(uf=uf, ub=ub, wa=wa, wabar=wabar, host=host)
 
 
 def profile_stages_measured(
@@ -116,6 +141,7 @@ def profile_stages_measured(
     params: Sequence[Any],
     x: Any,
     repeats: int = 3,
+    host: Optional[HostTransferModel] = None,
 ) -> Chain:
     """Wall-clock per-stage costs (the paper's §5.1 measurement phase)."""
     n = len(stages)
@@ -152,4 +178,4 @@ def profile_stages_measured(
         if i < n - 1:
             wa.append(_pytree_bytes(jax.eval_shape(lambda v: v, out)))
         a = out
-    return Chain.make(uf=uf, ub=ub, wa=wa, wabar=wabar)
+    return Chain.make(uf=uf, ub=ub, wa=wa, wabar=wabar, host=host)

@@ -1,4 +1,4 @@
-"""Config-facing remat policies: string → schedule tree.
+"""Config-facing remat policies: string → schedule tree / execution plan.
 
 ``make_policy_tree(policy, chain)`` accepts:
 
@@ -10,21 +10,39 @@
                         accepts ``1.5e9``, ``1.5G``, ``800M``, or ``x0.5``
                         (fraction of the store-all peak).
 - ``"revolve:BUDGET"``— AD-model comparator (activations-only checkpoints).
+- ``"optimal_offload:BUDGET[:BW]"`` — the three-tier schedule (device /
+                        device-full-history / host copy) under BUDGET bytes
+                        of *device* activation memory, with host link
+                        bandwidth BW in bytes/s (``8G`` = 8e9; defaults to
+                        ``chain.host`` when profiled, else the PCIe-3 x16
+                        constant).  ``BW = 0`` falls back to the two-tier
+                        optimal solver.
 
-The returned tree feeds :func:`repro.core.rematerialize.build_remat_fn`.
+The returned tree feeds :func:`repro.core.rematerialize.build_remat_fn` —
+which is why ``make_policy_tree`` refuses offload-bearing plans (XLA cannot
+express host DMA from a remat tree): use :func:`make_policy_plan` and run the
+plan's ``schedule`` through the eager offload executor instead.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Optional
 
-from .chain import Chain
+from .chain import Chain, HostTransferModel
 from .rematerialize import full_remat_tree, periodic_tree, sequential_tree
 from .schedule import Schedule, simulate
-from .solver import Tree, solve_optimal
+from .solver import Solution, Tree, solve_optimal
 
 _UNITS = {"K": 1e3, "M": 1e6, "G": 1e9, "T": 1e12}
+
+
+def _parse_size(spec: str) -> float:
+    m = re.fullmatch(r"([\d.eE+-]+)([KMGT]?)", spec.strip())
+    if not m:
+        raise ValueError(f"cannot parse size {spec!r}")
+    return float(m.group(1)) * _UNITS.get(m.group(2), 1.0)
 
 
 def parse_budget(spec: str, chain: Optional[Chain]) -> float:
@@ -34,10 +52,70 @@ def parse_budget(spec: str, chain: Optional[Chain]) -> float:
             raise ValueError("fractional budget needs a profiled chain")
         peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
         return float(spec[1:]) * peak
-    m = re.fullmatch(r"([\d.eE+-]+)([KMGT]?)", spec)
-    if not m:
-        raise ValueError(f"cannot parse memory budget {spec!r}")
-    return float(m.group(1)) * _UNITS.get(m.group(2), 1.0)
+    return _parse_size(spec)
+
+
+@dataclasses.dataclass
+class PolicyPlan:
+    """A resolved policy: the recursion tree (when the plan is expressible as
+    nested remat) and the op schedule (always).  ``uses_offload`` marks plans
+    that need the eager offload executor."""
+
+    policy: str
+    tree: Optional[Tree]
+    schedule: Optional[Schedule]
+    solution: Optional[Solution]
+    chain: Optional[Chain]
+    uses_offload: bool = False
+
+
+def make_policy_plan(policy: str, chain: Optional[Chain],
+                     length: Optional[int] = None,
+                     num_slots: int = 500) -> PolicyPlan:
+    """Resolve any policy string — including ``optimal_offload`` — into a
+    :class:`PolicyPlan`."""
+    if not policy.startswith("optimal_offload"):
+        tree = make_policy_tree(policy, chain, length=length,
+                                num_slots=num_slots)
+        from .solver import tree_to_schedule
+        L = chain.length if chain is not None else length
+        sched = tree_to_schedule(tree, L)
+        return PolicyPlan(policy, tree, sched, None, chain)
+
+    if chain is None:
+        raise ValueError(f"{policy!r} needs a profiled chain")
+    parts = policy.split(":")
+    if len(parts) < 2:
+        raise ValueError(
+            "optimal_offload policy needs a budget: 'optimal_offload:BUDGET"
+            "[:BW]'")
+    budget = parse_budget(parts[1], chain)
+    host = chain.host
+    if len(parts) >= 3:
+        bw = _parse_size(parts[2])
+        host = HostTransferModel(bandwidth_d2h=bw) if bw > 0 else None
+    elif host is None:
+        host = HostTransferModel.pcie_gen3()
+
+    if host is None or not host.enabled:
+        # zero host bandwidth: the third tier does not exist — two-tier DP
+        sol = solve_optimal(chain, budget, num_slots=num_slots)
+        if not sol.feasible:
+            raise MemoryError(
+                f"optimal_offload (bw=0 fallback): no feasible persistent "
+                f"schedule within {budget:.3e} bytes")
+        return PolicyPlan(policy, sol.tree, sol.schedule, sol, chain,
+                          uses_offload=False)
+
+    from ..offload.solver import solve_optimal_offload, tree_uses_offload
+    hchain = chain.with_host(host)
+    sol = solve_optimal_offload(hchain, budget, num_slots=num_slots)
+    if not sol.feasible:
+        raise MemoryError(
+            f"optimal_offload: no feasible schedule within {budget:.3e} "
+            f"bytes of device memory even with the host tier")
+    return PolicyPlan(policy, sol.tree, sol.schedule, sol, hchain,
+                      uses_offload=tree_uses_offload(sol.tree))
 
 
 def make_policy_tree(policy: str, chain: Optional[Chain],
@@ -65,4 +143,13 @@ def make_policy_tree(policy: str, chain: Optional[Chain],
                 f"{kind}: no feasible persistent schedule within "
                 f"{budget:.3e} bytes for this chain")
         return sol.tree
+    if policy.startswith("optimal_offload"):
+        plan = make_policy_plan(policy, chain, length=length,
+                                num_slots=num_slots)
+        if plan.uses_offload:
+            raise ValueError(
+                f"{policy!r} resolved to a host-offload plan, which nested "
+                f"remat cannot express — use make_policy_plan() and run "
+                f"plan.schedule through repro.offload.executor")
+        return plan.tree
     raise ValueError(f"unknown remat policy {policy!r}")

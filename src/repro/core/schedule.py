@@ -15,7 +15,22 @@ An operation is a ``(kind, l)`` pair with ``l`` in *paper numbering* (stages
 - ``("Free", item)`` — explicit drop (never emitted by the solver; used by the
   brute-force enumerator to explore *non-persistent* schedules, §4.1).
 
-Live memory items are tuples ``("a", i)``, ``("abar", i)``, ``("delta", i)``.
+Three-tier extension (the ``repro.offload`` subsystem; requires
+``chain.host``):
+
+- ``("Foff", i)``     — :math:`F_{off}^i`: launch an asynchronous device→host
+  copy of the *bare* activation ``a^i``.  Takes no compute time; the copy
+  lands at ``t + offload_time(w_{a^i})`` on an uncontended DMA link, so it
+  overlaps any amount of subsequent compute.  The device copy is untouched
+  (it is consumed later by ``F_∅``/``B`` as usual); host memory is charged
+  from launch.
+- ``("Prefetch", i)`` — synchronous host→device copy of ``a^i``: waits for
+  the offload to land (``t = max(t, offload_done)``) then pays
+  ``prefetch_time(w_{a^i})``; re-creates device item ``("a", i)`` and drops
+  the host copy.
+
+Live memory items are tuples ``("a", i)``, ``("abar", i)``, ``("delta", i)``;
+host copies are tracked separately and reported as ``host_peak_mem``.
 ``ā^i`` *includes* ``a^i`` (paper §3.1), so any op that needs ``a^{i}`` may read
 it from a live ``ā^{i}`` without consuming it.
 
@@ -37,7 +52,14 @@ Item = Tuple[str, int]
 Op = Tuple[str, object]
 
 F_NONE, F_CK, F_ALL, BWD, FREE = "Fnone", "Fck", "Fall", "B", "Free"
+F_OFF, PREFETCH = "Foff", "Prefetch"
 _FORWARD_KINDS = (F_NONE, F_CK, F_ALL)
+_OFFLOAD_KINDS = (F_OFF, PREFETCH)
+
+
+def uses_offload(schedule: "Schedule") -> bool:
+    """True if the schedule contains any host-tier (Foff/Prefetch) ops."""
+    return any(k in _OFFLOAD_KINDS for k, _ in schedule.ops)
 
 
 @dataclasses.dataclass
@@ -83,6 +105,10 @@ class SimResult:
     error: str = ""
     # memory occupied after the final op (should be just δ^0)
     final_mem: float = 0.0
+    # peak bytes parked on the host tier (0 for two-tier schedules)
+    host_peak_mem: float = 0.0
+    # time spent stalled waiting on host transfers (prefetch wait + copy)
+    transfer_stall: float = 0.0
 
 
 def _size(chain: Chain, item: Item) -> float:
@@ -101,13 +127,19 @@ def _size(chain: Chain, item: Item) -> float:
 
 
 def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
-             track_checkpoint_persistence: bool = False) -> SimResult:
+             track_checkpoint_persistence: bool = False,
+             host_mem_limit: float | None = None) -> SimResult:
     """Execute ``schedule`` on the cost model; returns validity, makespan, peak.
 
     If ``mem_limit`` is given, the schedule is invalid if any during-op memory
     exceeds it.  With ``track_checkpoint_persistence``, additionally marks the
     schedule invalid-as-persistent if a checkpointed value is dropped before
     its backward use (used to classify brute-force schedules).
+
+    Offload schedules (``Foff``/``Prefetch`` ops) additionally need
+    ``chain.host``; device and host peaks are tracked separately, and
+    ``host_mem_limit`` bounds the host tier the same way ``mem_limit`` bounds
+    the device.
     """
     L = chain.length
     live: dict = {("a", 0): True, ("delta", L + 1): True}
@@ -117,6 +149,12 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
     peak = mem
     t = 0.0
     persistent = True
+    # host tier: which a^i have a host copy, when their offload DMA lands
+    host_copies: set = set()
+    off_done: dict = {}
+    host_mem = 0.0
+    host_peak = 0.0
+    stall = 0.0
 
     def has_input_act(i: int) -> Tuple[bool, Item | None]:
         """Is a^i readable? Returns (ok, the live item that provides it)."""
@@ -136,6 +174,58 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 persistent = False
             mem -= _size(chain, item)
             del live[item]
+            continue
+
+        if kind in _OFFLOAD_KINDS:
+            i = int(arg)  # activation index, 0..L
+            if chain.host is None or not chain.host.enabled:
+                return SimResult(False, t, peak,
+                                 f"{kind} a^{i}: chain has no host tier")
+            if not (0 <= i <= L):
+                return SimResult(False, t, peak, f"{kind}: bad activation {i}")
+            w = float(chain.wa[i])
+            if kind == F_OFF:
+                if ("a", i) not in live:
+                    return SimResult(False, t, peak,
+                                     f"Foff: a^{i} not live as a bare "
+                                     f"activation")
+                if i in host_copies:
+                    return SimResult(False, t, peak,
+                                     f"Foff: a^{i} already offloaded")
+                # async launch: zero compute time, lands later; host memory is
+                # charged from launch.  The device copy stays (it is consumed
+                # by the following F_∅/B); the checkpoint obligation moves to
+                # the host copy.
+                off_done[i] = t + chain.host.offload_time(w)
+                host_copies.add(i)
+                host_mem += w
+                host_peak = max(host_peak, host_mem)
+                if host_mem_limit is not None and host_mem > host_mem_limit + 1e-9:
+                    return SimResult(False, t, peak,
+                                     f"Foff: host mem {host_mem} > limit "
+                                     f"{host_mem_limit}", host_peak_mem=host_peak)
+                ckpt.discard(("a", i))
+            else:  # PREFETCH
+                if i not in host_copies:
+                    return SimResult(False, t, peak,
+                                     f"Prefetch: a^{i} has no host copy")
+                if ("a", i) in live:
+                    return SimResult(False, t, peak,
+                                     f"Prefetch: a^{i} already on device")
+                during = mem + w
+                peak = max(peak, during)
+                if mem_limit is not None and during > mem_limit + 1e-9:
+                    return SimResult(False, t, peak,
+                                     f"Prefetch: mem {during} > limit "
+                                     f"{mem_limit}", host_peak_mem=host_peak)
+                t0 = t
+                t = max(t, off_done.get(i, t)) + chain.host.prefetch_time(w)
+                stall += t - t0
+                live[("a", i)] = True
+                mem += w
+                ckpt.add(("a", i))
+                host_copies.discard(i)
+                host_mem -= w
             continue
 
         l = int(arg)  # stage index, 1..L+1
@@ -207,8 +297,10 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
     if ("delta", 0) not in live:
         return SimResult(False, t, peak, "schedule did not produce δ^0")
     if track_checkpoint_persistence and not persistent:
-        return SimResult(False, t, peak, "non-persistent", final_mem=mem)
-    return SimResult(True, t, peak, final_mem=mem)
+        return SimResult(False, t, peak, "non-persistent", final_mem=mem,
+                         host_peak_mem=host_peak, transfer_stall=stall)
+    return SimResult(True, t, peak, final_mem=mem, host_peak_mem=host_peak,
+                     transfer_stall=stall)
 
 
 def assert_valid(chain: Chain, schedule: Schedule,

@@ -26,7 +26,7 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 
 from .chain import Chain
-from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule
+from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule, simulate
 
 INFEASIBLE = np.inf
 
@@ -111,12 +111,25 @@ def _views(dchain) -> dict:
 
 
 def _shift(vec: np.ndarray, w: int) -> np.ndarray:
-    """shifted[m] = vec[m - w] for m >= w else inf (memory reduction by w)."""
-    if w <= 0:
+    """shifted[m] = vec[m - w]: positive ``w`` is a memory *reduction*
+    (entries below ``w`` become inf), negative ``w`` a memory *gain* (used by
+    the offload DP when a checkpoint's device slots are reclaimed; lookups
+    beyond the table clamp to the last column — ``vec`` is non-increasing in
+    ``m`` and budgets above the total slot count are physically meaningless).
+    """
+    if w == 0:
         return vec
     out = np.full_like(vec, INFEASIBLE)
-    if w < len(vec):
-        out[w:] = vec[: len(vec) - w]
+    if w > 0:
+        if w < len(vec):
+            out[w:] = vec[: len(vec) - w]
+        return out
+    k = -w
+    if k < len(vec):
+        out[: len(vec) - k] = vec[k:]
+        out[len(vec) - k:] = vec[-1]
+    else:
+        out[:] = vec[-1]
     return out
 
 
@@ -134,7 +147,9 @@ def _m_none(v: dict, s: int, t: int) -> int:
     return int(best)
 
 
-def _fill_tables(dchain, tables: _Tables) -> None:
+def _fill_tables(dchain, tables: _Tables, allow_fall: bool = True) -> None:
+    """Bottom-up DP fill.  ``allow_fall=False`` disables the C2 (``F_all``)
+    branch for sub-chains of length > 1 — the revolve comparator."""
     v = _views(dchain)
     L, S = tables.L, tables.S
     C, choice, split = tables.C, tables.choice, tables.split
@@ -150,9 +165,6 @@ def _fill_tables(dchain, tables: _Tables) -> None:
     for d in range(1, L + 1):
         for s in range(1, L + 2 - d):
             t = s + d
-            # --- C2: start with F_all^s ---------------------------------
-            c2 = v["UF"][s] + _shift(C[s + 1, t], int(v["WABAR"][s])) + v["UB"][s]
-            c2[ms < _m_all(v, s, t)] = INFEASIBLE
             # --- C1: start with F_ck^s, split at s' ----------------------
             sps = np.arange(s + 1, t + 1)
             # candidate[k, m] for split sps[k]
@@ -165,6 +177,16 @@ def _fill_tables(dchain, tables: _Tables) -> None:
             best_k = np.argmin(cand, axis=0)
             c1 = cand[best_k, ms]
             c1[ms < _m_none(v, s, t)] = INFEASIBLE
+            if not allow_fall:
+                C[s, t] = c1
+                ch = np.zeros(S + 1, dtype=np.int8)
+                ch[np.isfinite(c1)] = 1
+                choice[s, t] = ch
+                split[s, t] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
+                continue
+            # --- C2: start with F_all^s ---------------------------------
+            c2 = v["UF"][s] + _shift(C[s + 1, t], int(v["WABAR"][s])) + v["UB"][s]
+            c2[ms < _m_all(v, s, t)] = INFEASIBLE
             # --- combine -------------------------------------------------
             use_all = c2 < c1  # ties -> Ck (arbitrary, both optimal)
             C[s, t] = np.where(use_all, c2, c1)
@@ -217,10 +239,7 @@ def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
     dchain = chain.discretize(mem_limit, num_slots)
     L, S = dchain.length, num_slots
     tables = _Tables(L, S)
-    if not allow_fall:
-        _fill_tables_no_fall(dchain, tables)
-    else:
-        _fill_tables(dchain, tables)
+    _fill_tables(dchain, tables, allow_fall=allow_fall)
 
     # Algorithm 1: top-level budget excludes the chain input a^0
     m_top = S - int(dchain.wa[0])
@@ -239,13 +258,11 @@ def solve_min_memory(chain: Chain, num_slots: int = 500,
     store-all peak as the limit, then rebuild at the smallest feasible slot
     count.  Used as the planner's fallback when the requested budget is
     infeasible (reports the actual budget it needed)."""
-    from .schedule import Schedule, simulate
-
     peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
     dchain = chain.discretize(peak, num_slots)
     L, S = dchain.length, num_slots
     tables = _Tables(L, S)
-    (_fill_tables if allow_fall else _fill_tables_no_fall)(dchain, tables)
+    _fill_tables(dchain, tables, allow_fall=allow_fall)
     w0 = int(dchain.wa[0])
     feasible = np.where(np.isfinite(tables.C[1, L + 1]))[0]
     if len(feasible) == 0:
@@ -256,35 +273,6 @@ def solve_min_memory(chain: Chain, num_slots: int = 500,
     budget = (m_min + w0) * dchain.slot_size  # physical memory incl. a^0
     return Solution(True, float(tables.C[1, L + 1, m_min]), Schedule(L, ops),
                     tree, budget, num_slots, m_min, tables.nbytes)
-
-
-def _fill_tables_no_fall(dchain, tables: _Tables) -> None:
-    """Same DP with the C2 branch disabled for t > s (revolve comparator)."""
-    v = _views(dchain)
-    L, S = tables.L, tables.S
-    C, choice, split = tables.C, tables.choice, tables.split
-    ms = np.arange(S + 1)
-    for s in range(1, L + 2):
-        feas = ms >= _m_all(v, s, s)
-        C[s, s, feas] = v["UF"][s] + v["UB"][s]
-        choice[s, s, feas] = 2
-    for d in range(1, L + 1):
-        for s in range(1, L + 2 - d):
-            t = s + d
-            sps = np.arange(s + 1, t + 1)
-            cand = np.empty((len(sps), S + 1), dtype=np.float64)
-            for k, sp in enumerate(sps):
-                fwd = v["CUM_UF"][sp - 1] - v["CUM_UF"][s - 1]
-                cand[k] = (fwd + _shift(C[sp, t], int(v["WA"][sp - 1]))
-                           + C[s, sp - 1])
-            best_k = np.argmin(cand, axis=0)
-            c1 = cand[best_k, ms]
-            c1[ms < _m_none(v, s, t)] = INFEASIBLE
-            C[s, t] = c1
-            ch = np.zeros(S + 1, dtype=np.int8)
-            ch[np.isfinite(c1)] = 1
-            choice[s, t] = ch
-            split[s, t] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
 
 
 def tree_to_schedule(tree: Tree, length: int) -> Schedule:

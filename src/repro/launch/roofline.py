@@ -106,7 +106,8 @@ class Roofline:
 
 def analyze(compiled, n_devices: int, model_flops: float,
             hlo_text: Optional[str] = None) -> Roofline:
-    ca = compiled.cost_analysis() or {}
+    from ..compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

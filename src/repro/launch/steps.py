@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.chain import Chain
-from ..core.policies import make_policy_tree
+from ..core.policies import make_policy_plan, make_policy_tree
 from ..core.solver import solve_optimal
 from ..distributed.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
                                     axis_rules, current_rules, spec_for)
@@ -122,6 +122,22 @@ def plan_chain(model: StagedLM, batch_specs: Dict, mesh, rules) -> Chain:
     return chain
 
 
+def _two_tier_or_min_memory(chain: Chain, budget: float, why: str):
+    """Best two-tier solution at ``budget``; if that is unreachable even with
+    maximal recompute, fall back to the minimum-memory persistent schedule
+    and report its true need."""
+    from ..core.solver import solve_min_memory
+
+    sol = solve_optimal(chain, budget, num_slots=500)
+    if not sol.feasible:
+        sol = solve_min_memory(chain, num_slots=500)
+        if not sol.feasible:
+            raise MemoryError("rotor: no feasible persistent schedule")
+        print(f"[rotor] {why}; min-memory schedule needs "
+              f"{sol.mem_limit/2**30:.2f} GiB of activations", flush=True)
+    return sol
+
+
 def plan_rotor_tree(model: StagedLM, batch_specs: Dict, mesh, rules,
                     policy: Optional[str] = None):
     """Resolve cfg.remat_policy into a schedule tree (None = store-all)."""
@@ -131,19 +147,22 @@ def plan_rotor_tree(model: StagedLM, batch_specs: Dict, mesh, rules,
         return None, None
     chain = plan_chain(model, batch_specs, mesh, rules)
     if policy == "rotor:auto":
-        from ..core.solver import solve_min_memory
         params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         budget = activation_budget_bytes(params_spec, mesh.size)
-        sol = solve_optimal(chain, budget, num_slots=500)
-        if not sol.feasible:
-            # budget unreachable even with maximal recompute: fall back to the
-            # minimum-memory persistent schedule and report its true need
-            sol = solve_min_memory(chain, num_slots=500)
-            if not sol.feasible:
-                raise MemoryError("rotor: no feasible persistent schedule")
-            print(f"[rotor] budget {budget/2**30:.2f} GiB/dev infeasible; "
-                  f"min-memory schedule needs {sol.mem_limit/2**30:.2f} GiB "
-                  f"of activations", flush=True)
+        sol = _two_tier_or_min_memory(
+            chain, budget, f"budget {budget/2**30:.2f} GiB/dev infeasible")
+        return sol.tree, chain
+    if policy.startswith("optimal_offload"):
+        # the jitted XLA path cannot express host DMA; when the offload plan
+        # actually uses the host tier, approximate with the best two-tier
+        # tree at the same device budget (the eager runtime path — see
+        # runtime/train_loop.py — runs the true offload schedule instead)
+        plan = make_policy_plan(policy, chain)
+        if not plan.uses_offload:
+            return plan.tree, chain
+        sol = _two_tier_or_min_memory(
+            chain, plan.solution.mem_limit,
+            "offload plan needs the host tier; jitted two-tier fallback")
         return sol.tree, chain
     return make_policy_tree(policy, chain), chain
 

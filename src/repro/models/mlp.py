@@ -14,6 +14,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map_unchecked
 from ..distributed.sharding import constrain
 from .common import dense_apply, dense_init
 
@@ -182,12 +183,11 @@ def moe_apply_ep(p: Params, cfg, x: jax.Array, mesh, dp_axes, ep_axis="model"
         return y.reshape(Bl, S_, d_), aux
 
     P_ = jax.sharding.PartitionSpec
-    fn = jax.shard_map(
+    fn = shard_map_unchecked(
         local_fn, mesh=mesh,
         in_specs=(P_(), P_(ep_axis), P_(ep_axis), P_(ep_axis),
                   P_(dp_axes if dp_axes else None)),
-        out_specs=(P_(dp_axes if dp_axes else None), P_()),
-        check_vma=False)
+        out_specs=(P_(dp_axes if dp_axes else None), P_()))
     y, aux = fn(p["router"]["kernel"], p["we_gate"]["kernel"],
                 p["we_up"]["kernel"], p["we_down"]["kernel"], x)
     # name the EP output so remat policies can pin it (save_moe: the backward

@@ -1,0 +1,26 @@
+"""Three-tier storage for optimal checkpointing: device activations, device
+full-history residuals, and asynchronous host-RAM copies.
+
+The subsystem extends the paper's two-saving computation model (``F_ck`` /
+``F_all``) with an offload tier priced by :class:`repro.core.chain
+.HostTransferModel`:
+
+- :mod:`repro.offload.solver`      — the offload-aware DP (``solve_optimal_
+  offload``) over ``(s, t, m_device)`` with a ``C3`` branch that parks a
+  sub-chain input in host RAM, plus ``OffNode`` recursion trees;
+- :mod:`repro.offload.host_buffer` — the pinned host staging pool with LRU
+  accounting used by the executor;
+- :mod:`repro.offload.executor`    — eager execution of offload schedules
+  against real JAX arrays via ``jax.device_put``.
+"""
+
+from .host_buffer import HostBuffer, HostBufferStats
+from .solver import (OffNode, solve_min_device_memory, solve_optimal_offload,
+                     tree_to_schedule, tree_uses_offload)
+from .executor import execute_offload_schedule
+
+__all__ = [
+    "HostBuffer", "HostBufferStats", "OffNode", "execute_offload_schedule",
+    "solve_min_device_memory", "solve_optimal_offload", "tree_to_schedule",
+    "tree_uses_offload",
+]

@@ -1,0 +1,132 @@
+"""Host-RAM staging pool for offloaded activations.
+
+The executor parks activation copies here between ``F_off`` and ``Prefetch``.
+The pool models a *pinned* allocation: a fixed capacity is reserved up front
+(pinned pages are what make async DMA possible), entries are accounted
+byte-exactly, and an optional LRU policy reclaims the least-recently-touched
+entries when an insert would overflow the reservation.
+
+Checkpoint copies are precious — evicting one silently would force a
+recompute the solver never planned — so eviction is opt-in: with
+``evict=False`` (the executor's default) an overflowing ``put`` raises
+instead.  The LRU machinery is still exercised for accounting (bench/serving
+scenarios reuse the pool as a best-effort activation cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, List, Optional
+
+
+@dataclasses.dataclass
+class HostBufferStats:
+    puts: int = 0
+    gets: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    evicted_bytes: int = 0
+    peak_bytes: int = 0
+
+
+class HostBuffer:
+    """Keyed byte-accounted pool with optional LRU eviction.
+
+    ``capacity_bytes=None`` means unbounded (accounting only).  ``on_evict``
+    is called with ``(key, value)`` for every LRU victim.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None,
+                 on_evict: Optional[Callable[[Any, Any], None]] = None):
+        if capacity_bytes is not None and capacity_bytes < 0:
+            raise ValueError("capacity_bytes must be >= 0")
+        self.capacity_bytes = capacity_bytes
+        self.on_evict = on_evict
+        self._entries: "OrderedDict[Any, tuple]" = OrderedDict()  # key -> (value, nbytes)
+        self._bytes = 0
+        self.stats = HostBufferStats()
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self._bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.stats.peak_bytes
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- operations --------------------------------------------------------
+
+    @staticmethod
+    def _nbytes_of(value, nbytes: Optional[int]) -> int:
+        if nbytes is not None:
+            return int(nbytes)
+        nb = getattr(value, "nbytes", None)
+        if nb is None:
+            raise ValueError("value has no .nbytes; pass nbytes explicitly")
+        return int(nb)
+
+    def put(self, key, value, nbytes: Optional[int] = None,
+            evict: bool = False) -> List[Any]:
+        """Insert (or replace) an entry; returns the keys evicted to fit.
+
+        With ``evict=False`` an insert that would exceed the pinned capacity
+        raises ``MemoryError`` — checkpoints must never vanish silently.
+        """
+        size = self._nbytes_of(value, nbytes)
+        self.stats.puts += 1
+        if key in self._entries:
+            self._bytes -= self._entries.pop(key)[1]
+        evicted: List[Any] = []
+        if self.capacity_bytes is not None:
+            if size > self.capacity_bytes:
+                raise MemoryError(
+                    f"host buffer: entry of {size} B exceeds pinned capacity "
+                    f"{self.capacity_bytes} B")
+            while self._bytes + size > self.capacity_bytes:
+                if not evict:
+                    raise MemoryError(
+                        f"host buffer: {size} B put overflows pinned capacity "
+                        f"{self.capacity_bytes} B ({self._bytes} B in use)")
+                old_key, (old_val, old_size) = self._entries.popitem(last=False)
+                self._bytes -= old_size
+                self.stats.evictions += 1
+                self.stats.evicted_bytes += old_size
+                evicted.append(old_key)
+                if self.on_evict is not None:
+                    self.on_evict(old_key, old_val)
+        self._entries[key] = (value, size)
+        self._bytes += size
+        self.stats.peak_bytes = max(self.stats.peak_bytes, self._bytes)
+        return evicted
+
+    def get(self, key, default=None):
+        """Fetch without removing; refreshes LRU recency."""
+        self.stats.gets += 1
+        if key not in self._entries:
+            self.stats.misses += 1
+            return default
+        self.stats.hits += 1
+        self._entries.move_to_end(key)
+        return self._entries[key][0]
+
+    def pop(self, key):
+        """Fetch and release the entry's bytes (the Prefetch path)."""
+        if key not in self._entries:
+            raise KeyError(f"host buffer: no entry {key!r}")
+        value, size = self._entries.pop(key)
+        self._bytes -= size
+        return value
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._bytes = 0

@@ -1,0 +1,306 @@
+"""Offload-aware optimal persistent checkpointing — the three-tier DP.
+
+Extends the paper's recursion (core/solver.py) with a third saving: park the
+sub-chain input ``a^{s-1}`` in host RAM, reclaiming its device slots while the
+right segment runs, and pay the PCIe cost only where it is not hidden by
+compute.  The branch (``C3``) mirrors the structure of ``C1``:
+
+.. math::
+
+    C3(s,t,m) = \\min_{s'} \\Big[ X + \\max(T_{off}(a^{s-1}) - X,\\, 0)
+                + T_{pre}(a^{s-1}) + C_b(s, s'-1, m) \\Big],
+    \\quad X = \\sum_{k=s}^{s'-1} u_f^k + C_b(s', t,\\,
+              m + w_{a^{s-1}} - w_{a^{s'-1}})
+
+The offload is launched asynchronously at the start of the group, so it
+overlaps the whole forward stream *and* the right segment (``X``); only the
+residue stalls.  The prefetch is issued once the right segment finishes (its
+target slots only exist from then on) and is charged in full.
+
+Because an input can only be offloaded while it exists as a *bare* device
+activation — after ``F_all^s`` the child's input lives embedded inside
+``ā^s`` and its bytes cannot be reclaimed — the DP carries one extra state
+bit: ``C_b`` (input bare, all three branches) vs ``C_e`` (input embedded,
+two-tier branches only).  ``C2`` children are embedded; ``C1``/``C3`` right
+children are bare; left children inherit the parent's bit (same input).
+
+With no host model (or zero bandwidth) every ``C3`` candidate is +inf and the
+tables reduce exactly to the two-tier DP — ``solve_optimal_offload`` then
+simply delegates to ``core.solver.solve_optimal``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple, Union
+
+import numpy as np
+
+from ..core.chain import Chain
+from ..core.schedule import (BWD, F_ALL, F_CK, F_NONE, F_OFF, PREFETCH,
+                             Schedule, simulate)
+from ..core.solver import (INFEASIBLE, AllNode, CkNode, Leaf, Solution,
+                           _m_all, _m_none, _shift, _views)
+from ..core.solver import Tree as CoreTree
+from ..core.solver import solve_optimal as _solve_optimal_two_tier
+
+
+@dataclasses.dataclass
+class OffNode:
+    """``F_off^{s-1}`` first: the group input ``a^{s-1}`` is parked in host
+    RAM while ``[s, sp-1]`` is streamed with ``F_∅`` and ``[sp, t]`` is
+    solved; a ``Prefetch`` restores it before ``[s, sp-1]`` is re-solved."""
+    s: int
+    sp: int
+    right: "Tree"   # sub-chain [sp, t]
+    left: "Tree"    # sub-chain [s, sp-1], executed after the prefetch
+
+
+Tree = Union[Leaf, AllNode, CkNode, OffNode]
+
+
+def tree_uses_offload(tree) -> bool:
+    """True if any node of the recursion tree is an ``OffNode``."""
+    if isinstance(tree, OffNode):
+        return True
+    if isinstance(tree, AllNode):
+        return tree_uses_offload(tree.rest)
+    if isinstance(tree, CkNode):
+        return tree_uses_offload(tree.right) or tree_uses_offload(tree.left)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# DP tables — one (C, choice, split) triple per input-state bit
+# ---------------------------------------------------------------------------
+
+class _OffloadTables:
+    """``b``: input bare (offloadable); ``e``: input embedded in an ā."""
+
+    def __init__(self, L: int, S: int):
+        self.L, self.S = L, S
+        shape = (L + 2, L + 2, S + 1)
+        self.Cb = np.full(shape, INFEASIBLE, dtype=np.float64)
+        self.Ce = np.full(shape, INFEASIBLE, dtype=np.float64)
+        # choice: 0 = infeasible, 1 = Ck, 2 = All, 3 = Offload
+        self.chb = np.zeros(shape, dtype=np.int8)
+        self.che = np.zeros(shape, dtype=np.int8)
+        self.spb = np.zeros(shape, dtype=np.int16)
+        self.spe = np.zeros(shape, dtype=np.int16)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.Cb.nbytes + self.Ce.nbytes + self.chb.nbytes
+                + self.che.nbytes + self.spb.nbytes + self.spe.nbytes)
+
+
+def _fill_tables_offload(dchain, tables: _OffloadTables,
+                         allow_fall: bool = True) -> None:
+    v = _views(dchain)
+    L, S = tables.L, tables.S
+    ms = np.arange(S + 1)
+    Cb, Ce = tables.Cb, tables.Ce
+    host = dchain.chain.host
+    # transfer times use *continuous* sizes (times are never discretized)
+    t_off = dchain.chain.offload_times()
+    t_pre = dchain.chain.prefetch_times()
+
+    # base cases: a single stage is F_all^s; B^s in both input states
+    for s in range(1, L + 2):
+        feas = ms >= _m_all(v, s, s)
+        for C, ch in ((Cb, tables.chb), (Ce, tables.che)):
+            C[s, s, feas] = v["UF"][s] + v["UB"][s]
+            ch[s, s, feas] = 2
+
+    for d in range(1, L + 1):
+        for s in range(1, L + 2 - d):
+            t = s + d
+            sps = np.arange(s + 1, t + 1)
+            m_none = _m_none(v, s, t)
+
+            # shared across branches: the right segment is always entered
+            # with a bare input (produced by the F_∅ stream)
+            right = np.empty((len(sps), S + 1), dtype=np.float64)
+            fwds = np.empty(len(sps))
+            for k, sp in enumerate(sps):
+                fwds[k] = v["CUM_UF"][sp - 1] - v["CUM_UF"][s - 1]
+                right[k] = fwds[k] + _shift(Cb[sp, t], int(v["WA"][sp - 1]))
+
+            # --- C2: F_all^s first; the child's input is embedded in ā^s --
+            c2 = None
+            if allow_fall:
+                c2 = (v["UF"][s] + _shift(Ce[s + 1, t], int(v["WABAR"][s]))
+                      + v["UB"][s])
+                c2[ms < _m_all(v, s, t)] = INFEASIBLE
+
+            # --- C3 right segments: budget gains the reclaimed input slots
+            cand3 = None
+            if host is not None and host.enabled and np.isfinite(t_off[s - 1]):
+                cand3 = np.empty((len(sps), S + 1), dtype=np.float64)
+                for k, sp in enumerate(sps):
+                    hidden = fwds[k] + _shift(
+                        Cb[sp, t], int(v["WA"][sp - 1]) - int(v["WA"][s - 1]))
+                    stall = np.maximum(0.0, t_off[s - 1] - hidden)
+                    cand3[k] = hidden + stall + t_pre[s - 1]
+
+            for C, CH, SP, bare in ((Cb, tables.chb, tables.spb, True),
+                                    (Ce, tables.che, tables.spe, False)):
+                # --- C1: F_ck^s first; left child keeps this input state --
+                cand1 = np.empty_like(right)
+                for k, sp in enumerate(sps):
+                    cand1[k] = right[k] + C[s, sp - 1]
+                best1 = np.argmin(cand1, axis=0)
+                c1 = cand1[best1, ms]
+                c1[ms < m_none] = INFEASIBLE
+
+                best = c1
+                ch = np.zeros(S + 1, dtype=np.int8)
+                ch[np.isfinite(c1)] = 1
+                sp_arr = np.where(ch == 1, sps[best1], 0).astype(np.int16)
+
+                if c2 is not None:
+                    use2 = c2 < best
+                    best = np.where(use2, c2, best)
+                    ch[use2 & np.isfinite(c2)] = 2
+                    sp_arr[use2] = 0
+
+                if bare and cand3 is not None:
+                    full3 = np.empty_like(cand3)
+                    for k, sp in enumerate(sps):
+                        full3[k] = cand3[k] + Cb[s, sp - 1]
+                    best3 = np.argmin(full3, axis=0)
+                    c3 = full3[best3, ms]
+                    c3[ms < m_none] = INFEASIBLE
+                    use3 = c3 < best
+                    best = np.where(use3, c3, best)
+                    ch[use3 & np.isfinite(c3)] = 3
+                    sp_arr[use3] = sps[best3][use3]
+
+                C[s, t] = best
+                ch[~np.isfinite(best)] = 0
+                CH[s, t] = ch
+                SP[s, t] = sp_arr
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction
+# ---------------------------------------------------------------------------
+
+def _rebuild(dchain, tables: _OffloadTables, s: int, t: int, m: int,
+             bare: bool) -> Tuple[List, Tree]:
+    v = _views(dchain)
+    S = tables.S
+    CH = tables.chb if bare else tables.che
+    SP = tables.spb if bare else tables.spe
+    ch = CH[s, t, m]
+    if ch == 0:
+        raise ValueError(f"infeasible sub-problem ({s},{t},{m},"
+                         f"{'bare' if bare else 'embedded'})")
+    if s == t:
+        return [(F_ALL, s), (BWD, s)], Leaf(s)
+    if ch == 2:
+        ops_rest, tree_rest = _rebuild(
+            dchain, tables, s + 1, t, m - int(v["WABAR"][s]), bare=False)
+        return ([(F_ALL, s)] + ops_rest + [(BWD, s)], AllNode(s, tree_rest))
+    sp = int(SP[s, t, m])
+    if ch == 1:
+        ops = [(F_CK, s)] + [(F_NONE, j) for j in range(s + 1, sp)]
+        ops_right, tree_right = _rebuild(
+            dchain, tables, sp, t, m - int(v["WA"][sp - 1]), bare=True)
+        ops_left, tree_left = _rebuild(dchain, tables, s, sp - 1, m, bare=bare)
+        return ops + ops_right + ops_left, CkNode(s, sp, tree_right, tree_left)
+    # ch == 3: offload the group input, stream everything with F_∅
+    assert bare, "offload branch reconstructed from an embedded-input state"
+    ops = [(F_OFF, s - 1)] + [(F_NONE, j) for j in range(s, sp)]
+    m_right = min(m + int(v["WA"][s - 1]) - int(v["WA"][sp - 1]), S)
+    ops_right, tree_right = _rebuild(dchain, tables, sp, t, m_right, bare=True)
+    ops_left, tree_left = _rebuild(dchain, tables, s, sp - 1, m, bare=True)
+    ops = ops + ops_right + [(PREFETCH, s - 1)] + ops_left
+    return ops, OffNode(s, sp, tree_right, tree_left)
+
+
+def tree_to_schedule(tree: Tree, length: int) -> Schedule:
+    """Flatten a (possibly offload-bearing) recursion tree into ops."""
+    ops: List = []
+
+    def rec(node: Tree):
+        if isinstance(node, Leaf):
+            ops.extend([(F_ALL, node.s), (BWD, node.s)])
+        elif isinstance(node, AllNode):
+            ops.append((F_ALL, node.s))
+            rec(node.rest)
+            ops.append((BWD, node.s))
+        elif isinstance(node, CkNode):
+            ops.append((F_CK, node.s))
+            ops.extend((F_NONE, j) for j in range(node.s + 1, node.sp))
+            rec(node.right)
+            rec(node.left)
+        elif isinstance(node, OffNode):
+            ops.append((F_OFF, node.s - 1))
+            ops.extend((F_NONE, j) for j in range(node.s, node.sp))
+            rec(node.right)
+            ops.append((PREFETCH, node.s - 1))
+            rec(node.left)
+        else:
+            raise TypeError(f"unknown tree node {node!r}")
+
+    rec(tree)
+    return Schedule(length, ops)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def solve_optimal_offload(chain: Chain, mem_limit: float,
+                          num_slots: int = 500,
+                          allow_fall: bool = True) -> Solution:
+    """Optimal persistent three-tier schedule under ``mem_limit`` *device*
+    memory.  Host memory is assumed abundant (simulate the schedule with
+    ``host_mem_limit`` to check the host peak).
+
+    Falls back to the two-tier ``solve_optimal`` when the chain has no host
+    model or the host link has zero bandwidth — the result is then identical
+    by construction.
+    """
+    if chain.host is None or not chain.host.enabled:
+        return _solve_optimal_two_tier(chain, mem_limit, num_slots=num_slots,
+                                       allow_fall=allow_fall)
+    dchain = chain.discretize(mem_limit, num_slots)
+    L, S = dchain.length, num_slots
+    tables = _OffloadTables(L, S)
+    _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
+
+    m_top = S - int(dchain.wa[0])
+    if m_top < 0 or not np.isfinite(tables.Cb[1, L + 1, m_top]):
+        return Solution(False, INFEASIBLE, None, None, mem_limit, num_slots,
+                        max(m_top, 0), tables.nbytes)
+    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_top, bare=True)
+    sched = Schedule(L, ops)
+    return Solution(True, float(tables.Cb[1, L + 1, m_top]), sched, tree,
+                    mem_limit, num_slots, m_top, tables.nbytes)
+
+
+def solve_min_device_memory(chain: Chain, num_slots: int = 500,
+                            allow_fall: bool = True) -> Solution:
+    """Smallest feasible *device* budget in the three-tier model — the floor
+    below the two-tier ``solve_min_memory`` that offloading unlocks."""
+    if chain.host is None or not chain.host.enabled:
+        from ..core.solver import solve_min_memory
+        return solve_min_memory(chain, num_slots=num_slots,
+                                allow_fall=allow_fall)
+    peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
+    dchain = chain.discretize(peak, num_slots)
+    L, S = dchain.length, num_slots
+    tables = _OffloadTables(L, S)
+    _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
+    w0 = int(dchain.wa[0])
+    feasible = np.where(np.isfinite(tables.Cb[1, L + 1]))[0]
+    if len(feasible) == 0:
+        return Solution(False, INFEASIBLE, None, None, peak, num_slots, 0,
+                        tables.nbytes)
+    m_min = int(feasible[0])
+    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_min, bare=True)
+    budget = (m_min + w0) * dchain.slot_size  # physical memory incl. a^0
+    return Solution(True, float(tables.Cb[1, L + 1, m_min]), Schedule(L, ops),
+                    tree, budget, num_slots, m_min, tables.nbytes)

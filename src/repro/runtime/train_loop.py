@@ -9,6 +9,7 @@ the mesh differs; every sharding flows from the logical-axis rules.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -24,8 +25,35 @@ from ..distributed.sharding import DEFAULT_RULES, axis_rules, spec_for
 from ..launch.steps import (batch_axes, make_train_step, opt_axes,
                             plan_rotor_tree, shard_tree, sharding_of)
 from ..models.lm import StagedLM
-from ..optim.adamw import AdamWConfig, adamw_init
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from ..optim.schedules import linear_warmup_cosine
+
+
+def _make_offload_step(model, opt_cfg: AdamWConfig, schedule, lr_fn):
+    """Eager train step for a three-tier (host-offload) schedule: gradients
+    come from the op-faithful offload executor — ``jax.device_put`` copies and
+    all — and only the optimizer update is jitted.  This is the path where
+    the solver's host tier is real, not a remat approximation."""
+    from ..offload.executor import execute_offload_schedule
+    from ..offload.host_buffer import HostBuffer
+
+    stage_fns = model.stage_fns()
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2))
+    def upd(grads, opt_state, params, lr):
+        return adamw_update(opt_cfg, grads, opt_state, params, lr)
+
+    def step_fn(params, opt_state, batch, step):
+        sp = model.stage_params(params)
+        loss, stage_grads, _ = execute_offload_schedule(
+            schedule, stage_fns, sp, batch, host_buffer=HostBuffer())
+        grads = model.combine_stage_grads(stage_grads)
+        lr = lr_fn(step) if lr_fn is not None else None
+        new_p, new_o, metrics = upd(grads, opt_state, params, lr)
+        metrics["loss"] = loss
+        return new_p, new_o, metrics
+
+    return step_fn
 
 
 @dataclasses.dataclass
@@ -62,14 +90,46 @@ def run_training(cfg, loop: TrainLoopConfig, mesh=None,
     shape = ShapeSpec("train", "train", loop.seq_len, loop.global_batch)
     with axis_rules(mesh, rules):
         batch_specs = input_specs(cfg, shape)
-        tree, chain = plan_rotor_tree(model, batch_specs, mesh, rules,
-                                      loop.policy)
+        offload_plan = None
+        if loop.policy and loop.policy.startswith("optimal_offload"):
+            from ..core.policies import make_policy_plan
+            from ..launch.steps import plan_chain
+
+            plan = make_policy_plan(
+                loop.policy, plan_chain(model, batch_specs, mesh, rules))
+            if plan.uses_offload:
+                if loop.grad_accum != 1:
+                    raise NotImplementedError(
+                        "grad_accum > 1 with an offload schedule")
+                if mesh.size > 1:
+                    # the eager executor commits prefetched activations to a
+                    # single device; mesh-sharded params/batch would mix
+                    # incompatible placements
+                    raise NotImplementedError(
+                        "the optimal_offload eager path runs on a single "
+                        "device; use a two-tier policy (rotor:...) on "
+                        "multi-device meshes")
+                offload_plan = plan
+                tree, chain = None, plan.chain
+                log_fn(f"[offload] three-tier plan: "
+                       f"{plan.schedule.count('Foff')} host offloads, "
+                       f"predicted {plan.solution.expected_time:.4f}s model "
+                       f"time/step — eager executor engaged")
+            else:
+                tree, chain = plan.tree, plan.chain
+        else:
+            tree, chain = plan_rotor_tree(model, batch_specs, mesh, rules,
+                                          loop.policy)
         if tree is not None:
             log_fn(f"[rotor] plan: {count_checkpoint_scopes(tree)} checkpoint "
                    f"scopes over {model.n_stages()} stages")
-        step_fn = jax.jit(make_train_step(model, opt_cfg, tree, lr_fn,
-                                          grad_accum=loop.grad_accum),
-                          donate_argnums=(0, 1))
+        if offload_plan is not None:
+            step_fn = _make_offload_step(model, opt_cfg,
+                                         offload_plan.schedule, lr_fn)
+        else:
+            step_fn = jax.jit(make_train_step(model, opt_cfg, tree, lr_fn,
+                                              grad_accum=loop.grad_accum),
+                              donate_argnums=(0, 1))
 
         params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(loop.seed))
         p_shard = sharding_of(shard_tree(params_spec, model.param_axes(),

@@ -125,10 +125,10 @@ def test_compressed_allreduce_on_mesh():
             mean, e2 = compressed_psum_mean(g, e, axes=("data",), n_members=4)
             return mean["w"][None], e2["w"][None]
 
-        fn = jax.jit(jax.shard_map(per_member, mesh=mesh,
-                                   in_specs=(P("data"), P("data")),
-                                   out_specs=(P("data"), P("data")),
-                                   check_vma=False))
+        from repro.compat import shard_map_unchecked
+        fn = jax.jit(shard_map_unchecked(per_member, mesh=mesh,
+                                         in_specs=(P("data"), P("data")),
+                                         out_specs=(P("data"), P("data"))))
         mean, e2 = fn(g_all, jnp.zeros((4, 8)))
         true_mean = np.asarray(g_all).mean(axis=0)
         got = np.asarray(mean)[0]

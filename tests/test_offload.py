@@ -1,0 +1,242 @@
+"""The three-tier (host-offload) subsystem: DP-vs-simulator exactness,
+dominance over the two-tier optimum, feasibility below the two-tier memory
+floor, real-array gradient equivalence, and the host pool's accounting."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.chain import Chain, HostTransferModel
+from repro.core.schedule import Schedule, simulate
+from repro.core.solver import solve_min_memory, solve_optimal
+from repro.offload.host_buffer import HostBuffer
+from repro.offload.solver import (solve_min_device_memory,
+                                  solve_optimal_offload, tree_to_schedule,
+                                  tree_uses_offload)
+
+from helpers import make_mlp_chain, random_chain, tree_allclose
+
+
+def _hosted_chain(rng, max_len=5) -> Chain:
+    ch = random_chain(rng, max_len=max_len)
+    host = HostTransferModel(
+        bandwidth_d2h=float(rng.choice([0.5, 1.0, 4.0, 100.0])),
+        latency=float(rng.choice([0.0, 0.3])))
+    return ch.with_host(host)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_simulator_matches_dp_makespan(seed):
+    """The offload DP's predicted makespan is exactly the simulator's, and
+    the rebuilt tree round-trips to the same schedule semantics."""
+    rng = np.random.default_rng(seed)
+    ch = _hosted_chain(rng)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    for frac in (0.3, 0.5, 0.75, 1.0):
+        m = float(math.ceil(peak * frac))
+        sol = solve_optimal_offload(ch, m, num_slots=int(m))
+        if not sol.feasible:
+            continue
+        res = simulate(ch, sol.schedule, m + 1e-6)
+        assert res.valid, res.error
+        assert abs(res.time - sol.expected_time) < 1e-9
+        res2 = simulate(ch, tree_to_schedule(sol.tree, ch.length), m + 1e-6)
+        assert res2.valid and abs(res2.time - res.time) < 1e-9
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_offload_never_slower_than_two_tier(seed):
+    """Dominance: at equal device budget the three-tier optimum is at least
+    as fast as the two-tier optimum (its branch set is a superset)."""
+    rng = np.random.default_rng(100 + seed)
+    ch = _hosted_chain(rng)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    for frac in (0.3, 0.5, 0.75, 1.0):
+        m = float(math.ceil(peak * frac))
+        two = solve_optimal(ch, m, num_slots=int(m))
+        three = solve_optimal_offload(ch, m, num_slots=int(m))
+        if two.feasible:
+            assert three.feasible
+            assert three.expected_time <= two.expected_time + 1e-9
+
+
+def test_feasible_below_two_tier_floor():
+    """With a fast host link, the device floor drops below the two-tier
+    ``solve_min_memory`` floor, and the sub-floor schedule simulates validly
+    within its reported device budget."""
+    lowered = 0
+    for seed in range(12):
+        rng = np.random.default_rng(200 + seed)
+        ch = random_chain(rng, max_len=5).with_host(
+            HostTransferModel(bandwidth_d2h=100.0))
+        f2 = solve_min_memory(ch, num_slots=200)
+        f3 = solve_min_device_memory(ch, num_slots=200)
+        assert f3.feasible
+        assert f3.mem_limit <= f2.mem_limit + 1e-9
+        if f3.mem_limit < f2.mem_limit - 1e-9:
+            lowered += 1
+            res = simulate(ch, f3.schedule, f3.mem_limit * (1 + 1e-6))
+            assert res.valid, res.error
+            assert tree_uses_offload(f3.tree)
+            assert res.host_peak_mem > 0
+    assert lowered >= 6, f"floor lowered on only {lowered}/12 chains"
+
+
+def test_zero_bandwidth_falls_back_to_two_tier():
+    rng = np.random.default_rng(7)
+    ch = random_chain(rng, max_len=4)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    m = float(math.ceil(peak * 0.6))
+    two = solve_optimal(ch, m, num_slots=int(m))
+    # no host model at all
+    sol = solve_optimal_offload(ch, m, num_slots=int(m))
+    assert sol.feasible == two.feasible
+    if two.feasible:
+        assert abs(sol.expected_time - two.expected_time) < 1e-12
+    # host model with zero bandwidth behaves identically
+    sol0 = solve_optimal_offload(
+        ch.with_host(HostTransferModel(bandwidth_d2h=0.0)), m,
+        num_slots=int(m))
+    assert sol0.feasible == two.feasible
+    if two.feasible:
+        assert abs(sol0.expected_time - two.expected_time) < 1e-12
+        assert not tree_uses_offload(sol0.tree)
+
+
+def test_offload_policy_plan():
+    from repro.core.policies import make_policy_plan, make_policy_tree
+
+    rng = np.random.default_rng(3)
+    ch = random_chain(rng, max_len=4)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    # zero-bandwidth spec: two-tier fallback, expressible as a remat tree
+    plan = make_policy_plan(f"optimal_offload:{peak:.0f}:0", ch)
+    assert not plan.uses_offload
+    tree = make_policy_tree(f"optimal_offload:{peak:.0f}:0", ch)
+    assert tree is not None
+    # effectively-free link at a tight budget: the host tier gets used
+    ch_fast = ch.with_host(HostTransferModel(bandwidth_d2h=1e12))
+    f2 = solve_min_memory(ch_fast, num_slots=200)
+    f3 = solve_min_device_memory(ch_fast, num_slots=200)
+    if f3.mem_limit < f2.mem_limit - 1e-9:
+        budget = 0.5 * (f2.mem_limit + f3.mem_limit)
+        plan = make_policy_plan(f"optimal_offload:{budget:.0f}", ch_fast,
+                                num_slots=200)
+        assert plan.schedule is not None
+        res = simulate(plan.chain, plan.schedule, budget * (1 + 1e-6))
+        assert res.valid, res.error
+
+
+def test_offload_grads_match_autograd():
+    """Real-array execution of an offload schedule — host copies included —
+    reproduces plain autograd's gradients bit-for-bit in value."""
+    from repro.core import execute_schedule, profile_stages_measured, \
+        reference_grads
+    from repro.core.schedule import uses_offload
+    from repro.offload.executor import execute_offload_schedule
+
+    L = 6
+    stages, params, x = make_mlp_chain(L)
+    chain = profile_stages_measured(stages, params, x, repeats=1)
+    # price the link so that transfers are attractive but not free
+    bw = sum(chain.wa) / max(float(chain.uf.sum()), 1e-9)
+    chain = chain.with_host(HostTransferModel(bandwidth_d2h=bw))
+    peak = simulate(chain, Schedule.store_all(L)).peak_mem
+    sol = solve_optimal_offload(chain, peak * 0.35, num_slots=300)
+    assert sol.feasible
+    assert uses_offload(sol.schedule), "budget chosen to force the host tier"
+    out_ref, g_ref, dx_ref = reference_grads(stages, params, x)
+    hb = HostBuffer()
+    out, grads, dx = execute_offload_schedule(sol.schedule, stages, params, x,
+                                              host_buffer=hb)
+    tree_allclose(grads, g_ref)
+    tree_allclose(dx, dx_ref)
+    assert hb.peak_bytes > 0
+    assert hb.bytes_in_use == 0  # every offload was prefetched back
+    # core executor transparently delegates offload-bearing schedules
+    out2, g2, dx2 = execute_schedule(sol.schedule, stages, params, x)
+    tree_allclose(g2, g_ref)
+
+
+def test_simulator_tracks_host_peak():
+    ch = Chain.homogeneous(3).with_host(HostTransferModel(bandwidth_d2h=1.0))
+    # park a^0 on host while the rest runs (F_∅ consumes the device copy),
+    # prefetch it back and replay stage 1 for its backward
+    ops = [("Foff", 0), ("Fnone", 1), ("Fall", 2), ("Fall", 3), ("Fall", 4),
+           ("B", 4), ("B", 3), ("B", 2), ("Prefetch", 0), ("Fall", 1),
+           ("B", 1)]
+    res = simulate(ch, Schedule(3, ops))
+    assert res.valid, res.error
+    assert res.host_peak_mem == float(ch.wa[0])
+    # prefetch waited for nothing (offload landed long ago) but paid the copy
+    assert abs(res.transfer_stall - ch.host.prefetch_time(ch.wa[0])) < 1e-12
+    # offloading without a host model is invalid
+    res2 = simulate(Chain.homogeneous(3), Schedule(3, ops))
+    assert not res2.valid
+
+
+def test_simulator_rejects_bad_offload_ops():
+    ch = Chain.homogeneous(2).with_host(HostTransferModel(bandwidth_d2h=1.0))
+    # prefetch without a host copy
+    assert not simulate(ch, Schedule(2, [("Prefetch", 0)])).valid
+    # double offload
+    assert not simulate(
+        ch, Schedule(2, [("Foff", 0), ("Foff", 0)])).valid
+    # offload of a non-live activation
+    assert not simulate(ch, Schedule(2, [("Foff", 1)])).valid
+
+
+def test_host_buffer_lru_accounting():
+    evicted = []
+    hb = HostBuffer(capacity_bytes=100,
+                    on_evict=lambda k, v: evicted.append(k))
+
+    class Blob:
+        def __init__(self, nbytes):
+            self.nbytes = nbytes
+
+    hb.put("a", Blob(40))
+    hb.put("b", Blob(40))
+    assert hb.bytes_in_use == 80 and hb.peak_bytes == 80
+    # checkpoints must not vanish silently
+    with pytest.raises(MemoryError):
+        hb.put("c", Blob(40))
+    # LRU eviction when explicitly allowed: "a" is oldest…
+    hb.put("c", Blob(40), evict=True)
+    assert evicted == ["a"] and "a" not in hb and "b" in hb
+    # …but a get() refreshes recency
+    hb.get("b")
+    hb.put("d", Blob(40), evict=True)
+    assert evicted == ["a", "c"] and "b" in hb
+    assert hb.stats.evictions == 2 and hb.stats.evicted_bytes == 80
+    # pop releases bytes
+    hb.pop("b")
+    assert hb.bytes_in_use == 40
+    with pytest.raises(KeyError):
+        hb.pop("b")
+    # an entry larger than the pinned pool can never fit
+    with pytest.raises(MemoryError):
+        hb.put("x", Blob(101), evict=True)
+    assert hb.peak_bytes == 80
+
+
+def test_train_loop_offload_policy():
+    """The runtime runs a genuinely offload-bearing schedule end-to-end and
+    matches the plain-autograd loss trajectory exactly."""
+    from repro.configs import smoke_config
+    from repro.runtime.train_loop import TrainLoopConfig, run_training
+
+    cfg = smoke_config("qwen1.5-4b", num_layers=8,
+                       layer_kinds=("dense",) * 8, n_chunks=8,
+                       scan_layer_remat="full")
+    logs = []
+    loop = TrainLoopConfig(steps=3, global_batch=2, seq_len=16,
+                           policy="optimal_offload:x0.6:1e15", log_every=100)
+    out = run_training(cfg, loop, log_fn=logs.append)
+    assert any("[offload]" in line for line in logs), logs
+    ref = run_training(
+        cfg, TrainLoopConfig(steps=3, global_batch=2, seq_len=16,
+                             policy="none", log_every=100),
+        log_fn=lambda *_: None)
+    np.testing.assert_allclose(out["losses"], ref["losses"], rtol=1e-6)

@@ -8,7 +8,6 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.bruteforce import optimal_time
 from repro.core.chain import Chain
@@ -47,14 +46,24 @@ def test_dp_matches_bruteforce_random(seed):
     _check_chain(random_chain(rng, max_len=4))
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.integers(1, 4), min_size=2, max_size=4),
-       st.lists(st.integers(1, 5), min_size=2, max_size=4),
-       st.lists(st.integers(1, 3), min_size=2, max_size=4))
-def test_dp_matches_bruteforce_hypothesis(uf, wabar, wa):
+def _hypothesis_case(uf, wabar, wa):
     n = min(len(uf), len(wabar), len(wa))
     ch = Chain.make(uf=uf[:n], ub=[1.0] * n, wa=wa[:n], wabar=wabar[:n])
     _check_chain(ch, fracs=(0.6, 1.0))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    test_dp_matches_bruteforce_hypothesis = settings(
+        max_examples=25, deadline=None)(
+        given(st.lists(st.integers(1, 4), min_size=2, max_size=4),
+              st.lists(st.integers(1, 5), min_size=2, max_size=4),
+              st.lists(st.integers(1, 3), min_size=2, max_size=4))(
+            _hypothesis_case))
+except ImportError:  # optional test dependency — see pyproject [test] extra
+    def test_dp_matches_bruteforce_hypothesis():
+        pytest.importorskip("hypothesis")
 
 
 def test_monotone_in_memory():
