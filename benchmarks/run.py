@@ -36,7 +36,11 @@ def main(argv=None) -> None:
             continue
         print(f"\n### bench:{name} — {desc}")
         t0 = time.perf_counter()
-        mod.main(emit=print, small=small)
+        res = mod.main(emit=print, small=small)
+        if name == "solver":
+            # machine-readable perf record, tracked across PRs
+            bench_solver.write_json(res, bench_solver.JSON_PATH)
+            print(f"### bench:solver wrote {bench_solver.JSON_PATH}")
         print(f"### bench:{name} done in {time.perf_counter()-t0:.1f}s")
 
 

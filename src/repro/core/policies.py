@@ -22,6 +22,13 @@ The returned tree feeds :func:`repro.core.rematerialize.build_remat_fn` —
 which is why ``make_policy_tree`` refuses offload-bearing plans (XLA cannot
 express host DMA from a remat tree): use :func:`make_policy_plan` and run the
 plan's ``schedule`` through the eager offload executor instead.
+
+All solver-backed policies (``rotor:*``, ``revolve:*``, ``optimal_offload:*``)
+are memoized through :mod:`repro.core.solver_cache`: resolving the same
+policy on the same profiled chain — a relaunch, or one point of a budget
+sweep revisited — returns the cached ``Solution`` without filling DP tables.
+``REPRO_SOLVER_CACHE=0`` disables this; ``REPRO_SOLVER_CACHE_DIR`` moves the
+on-disk store.
 """
 
 from __future__ import annotations

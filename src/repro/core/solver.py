@@ -6,9 +6,23 @@ input ``a^{s-1}`` and the gradient ``δ^t`` are live, with ``a^{s-1}`` *not*
 counted against ``m`` (``δ^t`` *is* counted — it appears in the
 :math:`m_\\varnothing`/:math:`m_{all}` thresholds).
 
-The recursion is computed bottom-up by sub-chain length, vectorized over the
-memory axis with numpy (the paper ships a C implementation for the same
-reason: a naive Python triple loop is ~1e11 ops for L=339, S=500).
+Two fill implementations share the recursion:
+
+- ``impl="banded"`` (default): the length-banded, split-batched float32
+  kernels of :mod:`repro.core.dp_kernels` — all starts of a sub-chain length
+  are processed together, one vectorized candidate plane per split, over
+  pre-shifted companion tables; the cost tables are upper-triangular bands
+  (~5.5× smaller than the seed layout), and branch choices are recomputed at
+  the O(L) cells the reconstruction visits instead of being stored.
+  ``expected_time`` is recomputed in float64 by the simulator, so the
+  published makespan is exact.
+- ``impl="reference"``: the original per-cell float64 fill, retained as the
+  slow-but-transparent comparator (kernel-equivalence tests and benchmarks
+  diff the two).
+
+Results are memoized through :mod:`repro.core.solver_cache` (in-memory LRU +
+on-disk store keyed by a content hash of the discretized problem), so
+repeated launches and budget sweeps skip the DP fill entirely.
 
 Outputs:
 - the optimal op ``Schedule`` (Algorithm 2),
@@ -21,14 +35,23 @@ Outputs:
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
+from . import dp_kernels, solver_cache
 from .chain import Chain
+from .dp_kernels import (INFEASIBLE, _m_all, _m_none, _shift,  # noqa: F401
+                         _views)
 from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule, simulate
 
-INFEASIBLE = np.inf
+
+def _resolve_impl(impl: Optional[str]) -> str:
+    impl = impl or os.environ.get("REPRO_DP_IMPL", "banded")
+    if impl not in ("banded", "reference"):
+        raise ValueError(f"unknown DP impl {impl!r}")
+    return impl
 
 
 # ---------------------------------------------------------------------------
@@ -76,7 +99,7 @@ class Solution:
 
 
 # ---------------------------------------------------------------------------
-# DP tables
+# Reference DP tables (the seed implementation, kept as the slow comparator)
 # ---------------------------------------------------------------------------
 
 class _Tables:
@@ -93,58 +116,6 @@ class _Tables:
     @property
     def nbytes(self) -> int:
         return self.C.nbytes + self.choice.nbytes + self.split.nbytes
-
-
-def _views(dchain) -> dict:
-    """1-based views aligned with paper notation (see chain.py docstring)."""
-    L = dchain.length
-    uf = np.concatenate([[0.0], dchain.uf])          # UF[l], l=1..L+1
-    ub = np.concatenate([[0.0], dchain.ub])
-    wabar = np.concatenate([[0], dchain.wabar])      # WABAR[l]
-    of = np.concatenate([[0], dchain.of])
-    ob = np.concatenate([[0], dchain.ob])
-    wa = np.asarray(dchain.wa)                       # WA[i], i=0..L
-    wd = np.concatenate([dchain.wdelta, [0]])        # WD[i], i=0..L+1 (δ^{L+1}=0)
-    cum_uf = np.cumsum(uf)                           # cum_uf[l] = Σ_{k<=l} UF[k]
-    return dict(L=L, UF=uf, UB=ub, WA=wa, WABAR=wabar, OF=of, OB=ob, WD=wd,
-                CUM_UF=cum_uf)
-
-
-def _shift(vec: np.ndarray, w: int) -> np.ndarray:
-    """shifted[m] = vec[m - w]: positive ``w`` is a memory *reduction*
-    (entries below ``w`` become inf), negative ``w`` a memory *gain* (used by
-    the offload DP when a checkpoint's device slots are reclaimed; lookups
-    beyond the table clamp to the last column — ``vec`` is non-increasing in
-    ``m`` and budgets above the total slot count are physically meaningless).
-    """
-    if w == 0:
-        return vec
-    out = np.full_like(vec, INFEASIBLE)
-    if w > 0:
-        if w < len(vec):
-            out[w:] = vec[: len(vec) - w]
-        return out
-    k = -w
-    if k < len(vec):
-        out[: len(vec) - k] = vec[k:]
-        out[len(vec) - k:] = vec[-1]
-    else:
-        out[:] = vec[-1]
-    return out
-
-
-def _m_all(v: dict, s: int, t: int) -> int:
-    return int(max(v["WD"][t] + v["WABAR"][s] + v["OF"][s],
-                   v["WD"][s] + v["WABAR"][s] + v["OB"][s]))
-
-
-def _m_none(v: dict, s: int, t: int) -> int:
-    best = v["WD"][t] + v["WA"][s] + v["OF"][s]
-    js = np.arange(s + 1, t)
-    if len(js):
-        best = max(best, (v["WD"][t] + v["WA"][js - 1] + v["WA"][js]
-                          + v["OF"][js]).max())
-    return int(best)
 
 
 def _fill_tables(dchain, tables: _Tables, allow_fall: bool = True) -> None:
@@ -202,9 +173,10 @@ def _fill_tables(dchain, tables: _Tables, allow_fall: bool = True) -> None:
 # Reconstruction (Algorithm 2) — both as op sequence and as recursion tree
 # ---------------------------------------------------------------------------
 
-def _rebuild(dchain, tables: _Tables, s: int, t: int, m: int
+def _rebuild(v: dict, tables: _Tables, s: int, t: int, m: int
              ) -> Tuple[List, Tree]:
-    v = _views(dchain)
+    """Reference-path reconstruction (``v`` is computed once by the caller
+    and threaded through — the per-node ``_views`` rebuild was O(L) each)."""
     ch = tables.choice[s, t, m]
     if ch == 0:
         raise ValueError(f"infeasible sub-problem ({s},{t},{m})")
@@ -212,13 +184,33 @@ def _rebuild(dchain, tables: _Tables, s: int, t: int, m: int
         return [(F_ALL, s), (BWD, s)], Leaf(s)
     if ch == 2:
         ops_rest, tree_rest = _rebuild(
-            dchain, tables, s + 1, t, m - int(v["WABAR"][s]))
+            v, tables, s + 1, t, m - int(v["WABAR"][s]))
         return ([(F_ALL, s)] + ops_rest + [(BWD, s)], AllNode(s, tree_rest))
     sp = int(tables.split[s, t, m])
     ops = [(F_CK, s)] + [(F_NONE, j) for j in range(s + 1, sp)]
     ops_right, tree_right = _rebuild(
-        dchain, tables, sp, t, m - int(v["WA"][sp - 1]))
-    ops_left, tree_left = _rebuild(dchain, tables, s, sp - 1, m)
+        v, tables, sp, t, m - int(v["WA"][sp - 1]))
+    ops_left, tree_left = _rebuild(v, tables, s, sp - 1, m)
+    return ops + ops_right + ops_left, CkNode(s, sp, tree_right, tree_left)
+
+
+def _rebuild_banded(v: dict, tab: "dp_kernels.BandedTable", s: int, t: int,
+                    m: int, allow_fall: bool) -> Tuple[List, Tree]:
+    """Banded-path reconstruction: branch choices are recomputed per visited
+    cell (the banded fill stores costs only)."""
+    ch, sp = dp_kernels.choose_two_tier(v, tab, s, t, m, allow_fall)
+    if ch == 0:
+        raise ValueError(f"infeasible sub-problem ({s},{t},{m})")
+    if s == t:
+        return [(F_ALL, s), (BWD, s)], Leaf(s)
+    if ch == 2:
+        ops_rest, tree_rest = _rebuild_banded(
+            v, tab, s + 1, t, m - int(v["WABAR"][s]), allow_fall)
+        return ([(F_ALL, s)] + ops_rest + [(BWD, s)], AllNode(s, tree_rest))
+    ops = [(F_CK, s)] + [(F_NONE, j) for j in range(s + 1, sp)]
+    ops_right, tree_right = _rebuild_banded(
+        v, tab, sp, t, m - int(v["WA"][sp - 1]), allow_fall)
+    ops_left, tree_left = _rebuild_banded(v, tab, s, sp - 1, m, allow_fall)
     return ops + ops_right + ops_left, CkNode(s, sp, tree_right, tree_left)
 
 
@@ -226,8 +218,19 @@ def _rebuild(dchain, tables: _Tables, s: int, t: int, m: int
 # Public API
 # ---------------------------------------------------------------------------
 
+def _finish(chain: Chain, mem_limit: float, num_slots: int,
+            m_use: int, table_bytes: int, rebuild_fn) -> Solution:
+    """Rebuild at ``m_use`` and publish the float64 simulator makespan."""
+    ops, tree = rebuild_fn(m_use)
+    sched = Schedule(chain.length, ops)
+    expected = float(simulate(chain, sched).time)
+    return Solution(True, expected, sched, tree, mem_limit, num_slots, m_use,
+                    table_bytes)
+
+
 def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
-                  allow_fall: bool = True) -> Solution:
+                  allow_fall: bool = True, impl: Optional[str] = None,
+                  cache: bool = True) -> Solution:
     """Optimal persistent schedule for ``chain`` under ``mem_limit`` memory.
 
     ``allow_fall=False`` disables the ``C2`` branch for sub-chains of length
@@ -235,44 +238,84 @@ def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
     **revolve** comparator of the paper (§5.3, third strategy), i.e. the best
     persistent strategy in the Automatic Differentiation model, converted to a
     valid schedule by running ``F_all`` right before each backward.
-    """
-    dchain = chain.discretize(mem_limit, num_slots)
-    L, S = dchain.length, num_slots
-    tables = _Tables(L, S)
-    _fill_tables(dchain, tables, allow_fall=allow_fall)
 
-    # Algorithm 1: top-level budget excludes the chain input a^0
-    m_top = S - int(dchain.wa[0])
-    if m_top < 0 or not np.isfinite(tables.C[1, L + 1, m_top]):
-        return Solution(False, INFEASIBLE, None, None, mem_limit, num_slots,
-                        max(m_top, 0), tables.nbytes)
-    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_top)
-    sched = Schedule(L, ops)
-    return Solution(True, float(tables.C[1, L + 1, m_top]), sched, tree,
-                    mem_limit, num_slots, m_top, tables.nbytes)
+    ``impl`` picks the fill kernels (``"banded"`` default, ``"reference"``
+    for the seed float64 path; env ``REPRO_DP_IMPL`` overrides the default).
+    ``cache=False`` bypasses the solver cache (used by benchmarks).
+    """
+    impl = _resolve_impl(impl)
+    dchain = chain.discretize(mem_limit, num_slots)
+
+    def solve() -> Solution:
+        L, S = dchain.length, num_slots
+        m_top = S - int(dchain.wa[0])  # Alg. 1: budget excludes the input a^0
+        v = _views(dchain)
+        if impl == "reference":
+            tables = _Tables(L, S)
+            _fill_tables(dchain, tables, allow_fall=allow_fall)
+            if m_top < 0 or not np.isfinite(tables.C[1, L + 1, m_top]):
+                return Solution(False, INFEASIBLE, None, None, mem_limit,
+                                num_slots, max(m_top, 0), tables.nbytes)
+            ops, tree = _rebuild(v, tables, 1, L + 1, m_top)
+            return Solution(True, float(tables.C[1, L + 1, m_top]),
+                            Schedule(L, ops), tree, mem_limit, num_slots,
+                            m_top, tables.nbytes)
+        tab = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall, v=v)
+        if m_top < 0 or not np.isfinite(tab.row(1, L + 1)[m_top]):
+            return Solution(False, INFEASIBLE, None, None, mem_limit,
+                            num_slots, max(m_top, 0), tab.nbytes)
+        return _finish(chain, mem_limit, num_slots, m_top, tab.nbytes,
+                       lambda m: _rebuild_banded(v, tab, 1, L + 1, m,
+                                                 allow_fall))
+
+    return solver_cache.memoize_solve("solve_optimal", impl, chain, dchain,
+                                      num_slots, allow_fall, cache, solve)
 
 
 def solve_min_memory(chain: Chain, num_slots: int = 500,
-                     allow_fall: bool = True) -> Solution:
+                     allow_fall: bool = True, impl: Optional[str] = None,
+                     cache: bool = True) -> Solution:
     """Smallest-memory feasible persistent schedule: run the DP with the
     store-all peak as the limit, then rebuild at the smallest feasible slot
     count.  Used as the planner's fallback when the requested budget is
     infeasible (reports the actual budget it needed)."""
+    impl = _resolve_impl(impl)
     peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
     dchain = chain.discretize(peak, num_slots)
-    L, S = dchain.length, num_slots
-    tables = _Tables(L, S)
-    _fill_tables(dchain, tables, allow_fall=allow_fall)
-    w0 = int(dchain.wa[0])
-    feasible = np.where(np.isfinite(tables.C[1, L + 1]))[0]
-    if len(feasible) == 0:
-        return Solution(False, INFEASIBLE, None, None, peak, num_slots, 0,
-                        tables.nbytes)
-    m_min = int(feasible[0])
-    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_min)
-    budget = (m_min + w0) * dchain.slot_size  # physical memory incl. a^0
-    return Solution(True, float(tables.C[1, L + 1, m_min]), Schedule(L, ops),
-                    tree, budget, num_slots, m_min, tables.nbytes)
+
+    def solve() -> Solution:
+        L, S = dchain.length, num_slots
+        w0 = int(dchain.wa[0])
+        v = _views(dchain)
+        if impl == "reference":
+            tables = _Tables(L, S)
+            _fill_tables(dchain, tables, allow_fall=allow_fall)
+            top = tables.C[1, L + 1]
+            table_bytes = tables.nbytes
+            rebuild_fn = lambda m: _rebuild(v, tables, 1, L + 1, m)  # noqa: E731
+        else:
+            tab = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall,
+                                           v=v)
+            top = tab.row(1, L + 1)
+            table_bytes = tab.nbytes
+            rebuild_fn = lambda m: _rebuild_banded(v, tab, 1, L + 1, m,  # noqa: E731
+                                                   allow_fall)
+        feasible = np.where(np.isfinite(top))[0]
+        if len(feasible) == 0:
+            return Solution(False, INFEASIBLE, None, None, peak, num_slots,
+                            0, table_bytes)
+        m_min = int(feasible[0])
+        budget = (m_min + w0) * dchain.slot_size  # physical mem incl. a^0
+        if impl == "reference":
+            ops, tree = rebuild_fn(m_min)
+            return Solution(True, float(top[m_min]), Schedule(L, ops), tree,
+                            budget, num_slots, m_min, table_bytes)
+        return _finish(chain, budget, num_slots, m_min, table_bytes,
+                       rebuild_fn)
+
+    return solver_cache.memoize_solve("solve_min_memory", impl, chain,
+                                      dchain, num_slots, allow_fall, cache,
+                                      solve)
 
 
 def tree_to_schedule(tree: Tree, length: int) -> Schedule:

@@ -1,0 +1,312 @@
+"""Persistent memoization for the DP solvers: in-memory LRU + on-disk store.
+
+Every public solver entry point (``solve_optimal``, ``solve_min_memory``,
+``solve_optimal_offload``, ``solve_min_device_memory``) keys its inputs by a
+content hash of the *discretized* problem — the slot-rounded size arrays, the
+continuous stage times, the host-link model, the budget/slot count, and the
+branch flags — and memoizes the returned :class:`~repro.core.solver.Solution`.
+Repeated launches with the same (model × shape × mesh × policy) and budget
+sweeps that revisit a point therefore skip the table fill entirely; this is
+what makes plan-time a non-cost for the train/serve launch paths.
+
+Environment knobs:
+
+- ``REPRO_SOLVER_CACHE=0`` (or ``off``/``false``/``no``) disables caching
+  entirely (no reads, no writes).
+- ``REPRO_SOLVER_CACHE_DIR=<dir>`` sets the on-disk store location; an empty
+  value keeps the cache memory-only.  Default:
+  ``$XDG_CACHE_HOME/repro/solver-cache`` (``~/.cache/...``).
+- ``REPRO_SOLVER_CACHE_SIZE=<n>`` caps the in-memory LRU (default 128).
+- ``REPRO_SOLVER_CACHE_DISK_SIZE=<n>`` caps the on-disk store (default 512
+  entries; oldest evicted).
+
+Keys include a content hash of the solver source modules, so editing solver
+logic automatically invalidates stale on-disk entries.
+
+Disk entries are pickles written atomically; a corrupted, truncated, or
+version-skewed entry is treated as a miss (and deleted best-effort) — the
+caller simply re-solves and overwrites it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import sys
+import tempfile
+import threading
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Optional
+
+import numpy as np
+
+_MAGIC = "repro-solver-cache"
+_VERSION = 1
+_FALSEY = {"0", "off", "false", "no"}
+
+# modules whose source defines what a Solution means; their content hash is
+# part of every cache key, so editing solver logic auto-invalidates stale
+# on-disk entries instead of silently serving pre-fix Solutions
+_FINGERPRINT_MODULES = ("repro.core.chain", "repro.core.schedule",
+                        "repro.core.dp_kernels", "repro.core.solver",
+                        "repro.offload.solver")
+_code_fingerprint: Optional[str] = None
+
+
+def code_fingerprint() -> str:
+    """Content hash of the solver implementation (computed once)."""
+    global _code_fingerprint
+    if _code_fingerprint is None:
+        import importlib
+        h = hashlib.sha256()
+        for name in _FINGERPRINT_MODULES:
+            try:
+                mod = importlib.import_module(name)
+                with open(mod.__file__, "rb") as f:
+                    h.update(f.read())
+            except Exception:
+                h.update(name.encode())  # missing module: still deterministic
+        _code_fingerprint = h.hexdigest()
+    return _code_fingerprint
+
+
+def _default_dir() -> Optional[Path]:
+    env = os.environ.get("REPRO_SOLVER_CACHE_DIR")
+    if env is not None:
+        return Path(env) if env else None
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache")
+    return Path(base) / "repro" / "solver-cache"
+
+
+class SolverCache:
+    """Thread-safe LRU of solver Solutions with an optional disk tier."""
+
+    def __init__(self, capacity: Optional[int] = None,
+                 directory: Optional[Path] = "auto",
+                 enabled: Optional[bool] = None):
+        if enabled is None:
+            enabled = os.environ.get(
+                "REPRO_SOLVER_CACHE", "1").strip().lower() not in _FALSEY
+        if capacity is None:
+            try:
+                capacity = int(os.environ.get("REPRO_SOLVER_CACHE_SIZE", 128))
+            except ValueError:
+                capacity = 128
+        self.enabled = enabled
+        self.capacity = max(capacity, 1)
+        try:
+            self.disk_capacity = max(int(os.environ.get(
+                "REPRO_SOLVER_CACHE_DISK_SIZE", 512)), 1)
+        except ValueError:
+            self.disk_capacity = 512
+        self.directory = _default_dir() if directory == "auto" else (
+            Path(directory) if directory else None)
+        if not self.enabled:
+            self.directory = None
+        self._mem: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._disk_failures = 0     # consecutive; disk tier pauses after 8
+        self.stats = {"hits": 0, "misses": 0, "disk_hits": 0,
+                      "disk_errors": 0, "puts": 0}
+
+    # -- keying ------------------------------------------------------------
+
+    def key_for(self, kind: str, impl: str, chain, dchain,
+                num_slots: int, allow_fall: bool) -> str:
+        """Content hash of the discretized problem + solve flags."""
+        h = hashlib.sha256()
+        for part in (_MAGIC, str(_VERSION), code_fingerprint(), kind, impl,
+                     str(num_slots), str(int(allow_fall))):
+            h.update(part.encode())
+            h.update(b"\0")
+        h.update(np.float64(dchain.slot_size).tobytes())
+        for arr in (dchain.wa, dchain.wabar, dchain.wdelta, dchain.of,
+                    dchain.ob):
+            h.update(np.ascontiguousarray(arr, dtype=np.int64).tobytes())
+        for arr in (chain.uf, chain.ub, chain.wa):
+            h.update(np.ascontiguousarray(arr, dtype=np.float64).tobytes())
+        host = chain.host
+        if host is None:
+            h.update(b"nohost")
+        else:
+            h.update(np.array(
+                [host.bandwidth_d2h,
+                 -1.0 if host.bandwidth_h2d is None else host.bandwidth_h2d,
+                 host.latency], dtype=np.float64).tobytes())
+        return h.hexdigest()
+
+    # -- lookup / store ----------------------------------------------------
+
+    def _path(self, key: str) -> Optional[Path]:
+        return self.directory / f"{key}.pkl" if self.directory else None
+
+    def get(self, key: str) -> Optional[Any]:
+        if not self.enabled:
+            return None
+        with self._lock:
+            if key in self._mem:
+                self._mem.move_to_end(key)
+                self.stats["hits"] += 1
+                return self._mem[key]
+        value = self._disk_get(key)
+        if value is not None:
+            with self._lock:
+                self.stats["hits"] += 1
+                self.stats["disk_hits"] += 1
+                self._mem_put(key, value)
+            return value
+        with self._lock:
+            self.stats["misses"] += 1
+        return None
+
+    def put(self, key: str, value: Any) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self.stats["puts"] += 1
+            self._mem_put(key, value)
+        self._disk_put(key, value)
+
+    def _mem_put(self, key: str, value: Any) -> None:
+        self._mem[key] = value
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+
+    # -- disk tier ---------------------------------------------------------
+
+    def _disk_get(self, key: str) -> Optional[Any]:
+        path = self._path(key)
+        if path is None or not path.is_file():
+            return None
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+            magic, version, stored_key, value = payload
+            if magic != _MAGIC or version != _VERSION or stored_key != key:
+                raise ValueError("cache entry header mismatch")
+            return value
+        except Exception:
+            with self._lock:
+                self.stats["disk_errors"] += 1
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+
+    def _disk_put(self, key: str, value: Any) -> None:
+        path = self._path(key)
+        if path is None or self._disk_failures >= 8:
+            return
+        # recursion trees nest O(L) deep; pickling recurses through them
+        limit = sys.getrecursionlimit()
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+            try:
+                sys.setrecursionlimit(max(limit, 100_000))
+                with os.fdopen(fd, "wb") as f:
+                    pickle.dump((_MAGIC, _VERSION, key, value), f,
+                                protocol=pickle.HIGHEST_PROTOCOL)
+                os.replace(tmp, path)
+            finally:
+                sys.setrecursionlimit(limit)
+                if os.path.exists(tmp):
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+            self._disk_failures = 0
+            self._disk_prune()
+        except Exception:
+            # best-effort tier: count the failure and keep trying (a burst of
+            # consecutive failures pauses disk writes for this process)
+            with self._lock:
+                self.stats["disk_errors"] += 1
+            self._disk_failures += 1
+
+    def _disk_prune(self) -> None:
+        """Bound the on-disk store: evict oldest entries beyond the cap."""
+        try:
+            entries = sorted(self.directory.glob("*.pkl"),
+                             key=lambda p: p.stat().st_mtime)
+            for p in entries[:max(len(entries) - self.disk_capacity, 0)]:
+                p.unlink()
+        except OSError:
+            pass
+
+    # -- maintenance -------------------------------------------------------
+
+    def clear(self, memory_only: bool = False) -> None:
+        with self._lock:
+            self._mem.clear()
+        if not memory_only and self.directory and self.directory.is_dir():
+            for p in self.directory.glob("*.pkl"):
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            for k in self.stats:
+                self.stats[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# process-wide default cache (rebuilt lazily so env changes take effect)
+# ---------------------------------------------------------------------------
+
+_default: Optional[SolverCache] = None
+_default_lock = threading.Lock()
+
+
+def get_cache() -> SolverCache:
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = SolverCache()
+        return _default
+
+
+def configure(**kwargs) -> SolverCache:
+    """Replace the process-wide cache (kwargs as for :class:`SolverCache`)."""
+    global _default
+    with _default_lock:
+        _default = SolverCache(**kwargs)
+        return _default
+
+
+def reset() -> None:
+    """Drop the process-wide cache; the next use rebuilds it from the env."""
+    global _default
+    with _default_lock:
+        _default = None
+
+
+def stats() -> dict:
+    return dict(get_cache().stats)
+
+
+def memoize_solve(kind: str, impl: str, chain, dchain, num_slots: int,
+                  allow_fall: bool, use_cache: bool, solve):
+    """Shared lookup/store wrapper for the solver entry points: returns the
+    cached Solution for this discretized problem, or runs ``solve()`` and
+    stores its result.  ``use_cache=False`` bypasses the cache entirely
+    (benchmarks time real fills)."""
+    if not use_cache:
+        return solve()
+    sc = get_cache()
+    if not sc.enabled:
+        return solve()
+    key = sc.key_for(kind, impl, chain, dchain, num_slots, allow_fall)
+    hit = sc.get(key)
+    if hit is not None:
+        return hit
+    sol = solve()
+    sc.put(key, sol)
+    return sol

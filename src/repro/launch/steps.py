@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core import solver_cache
 from ..core.chain import Chain
 from ..core.policies import make_policy_plan, make_policy_tree
 from ..core.solver import solve_optimal
@@ -251,6 +252,13 @@ def build_cell(arch_cfg, shape_spec, mesh, policy: Optional[str] = None,
 
     if shape_spec.kind == "train":
         tree, chain = plan_rotor_tree(model, batch_specs, mesh, rules, policy)
+        st = solver_cache.stats()
+        if st["hits"] or st["misses"]:
+            # repeated launches and budget sweeps are served from the
+            # persistent solver cache — the DP fill is skipped on hits
+            print(f"[rotor] solver cache: {st['hits']} hits / "
+                  f"{st['misses']} misses ({st['disk_hits']} from disk)",
+                  flush=True)
         opt_cfg = opt_cfg or AdamWConfig()
         opt_spec = jax.eval_shape(adamw_init, params_spec)
         opt_sds = shard_tree(opt_spec, opt_axes(model.param_axes()), mesh,

@@ -27,20 +27,26 @@ children are bare; left children inherit the parent's bit (same input).
 With no host model (or zero bandwidth) every ``C3`` candidate is +inf and the
 tables reduce exactly to the two-tier DP — ``solve_optimal_offload`` then
 simply delegates to ``core.solver.solve_optimal``.
+
+Like the two-tier solver, the fill runs on the banded split-batched kernels
+of :mod:`repro.core.dp_kernels` by default (the C3 branch is one more batched
+candidate plane; ``impl="reference"`` keeps the seed per-cell float64 path),
+and results are memoized through :mod:`repro.core.solver_cache`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple, Union
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
+from ..core import dp_kernels, solver_cache
 from ..core.chain import Chain
 from ..core.schedule import (BWD, F_ALL, F_CK, F_NONE, F_OFF, PREFETCH,
                              Schedule, simulate)
 from ..core.solver import (INFEASIBLE, AllNode, CkNode, Leaf, Solution,
-                           _m_all, _m_none, _shift, _views)
+                           _m_all, _m_none, _resolve_impl, _shift, _views)
 from ..core.solver import Tree as CoreTree
 from ..core.solver import solve_optimal as _solve_optimal_two_tier
 
@@ -71,7 +77,7 @@ def tree_uses_offload(tree) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# DP tables — one (C, choice, split) triple per input-state bit
+# Reference DP tables — one (C, choice, split) triple per input-state bit
 # ---------------------------------------------------------------------------
 
 class _OffloadTables:
@@ -186,9 +192,9 @@ def _fill_tables_offload(dchain, tables: _OffloadTables,
 # Reconstruction
 # ---------------------------------------------------------------------------
 
-def _rebuild(dchain, tables: _OffloadTables, s: int, t: int, m: int,
+def _rebuild(v: dict, dchain, tables: _OffloadTables, s: int, t: int, m: int,
              bare: bool) -> Tuple[List, Tree]:
-    v = _views(dchain)
+    """Reference-path reconstruction (``v`` computed once, threaded through)."""
     S = tables.S
     CH = tables.chb if bare else tables.che
     SP = tables.spb if bare else tables.spe
@@ -200,21 +206,62 @@ def _rebuild(dchain, tables: _OffloadTables, s: int, t: int, m: int,
         return [(F_ALL, s), (BWD, s)], Leaf(s)
     if ch == 2:
         ops_rest, tree_rest = _rebuild(
-            dchain, tables, s + 1, t, m - int(v["WABAR"][s]), bare=False)
+            v, dchain, tables, s + 1, t, m - int(v["WABAR"][s]), bare=False)
         return ([(F_ALL, s)] + ops_rest + [(BWD, s)], AllNode(s, tree_rest))
     sp = int(SP[s, t, m])
     if ch == 1:
         ops = [(F_CK, s)] + [(F_NONE, j) for j in range(s + 1, sp)]
         ops_right, tree_right = _rebuild(
-            dchain, tables, sp, t, m - int(v["WA"][sp - 1]), bare=True)
-        ops_left, tree_left = _rebuild(dchain, tables, s, sp - 1, m, bare=bare)
+            v, dchain, tables, sp, t, m - int(v["WA"][sp - 1]), bare=True)
+        ops_left, tree_left = _rebuild(v, dchain, tables, s, sp - 1, m,
+                                       bare=bare)
         return ops + ops_right + ops_left, CkNode(s, sp, tree_right, tree_left)
     # ch == 3: offload the group input, stream everything with F_∅
     assert bare, "offload branch reconstructed from an embedded-input state"
     ops = [(F_OFF, s - 1)] + [(F_NONE, j) for j in range(s, sp)]
     m_right = min(m + int(v["WA"][s - 1]) - int(v["WA"][sp - 1]), S)
-    ops_right, tree_right = _rebuild(dchain, tables, sp, t, m_right, bare=True)
-    ops_left, tree_left = _rebuild(dchain, tables, s, sp - 1, m, bare=True)
+    ops_right, tree_right = _rebuild(v, dchain, tables, sp, t, m_right,
+                                     bare=True)
+    ops_left, tree_left = _rebuild(v, dchain, tables, s, sp - 1, m, bare=True)
+    ops = ops + ops_right + [(PREFETCH, s - 1)] + ops_left
+    return ops, OffNode(s, sp, tree_right, tree_left)
+
+
+def _rebuild_banded(v: dict, tb, te, toffP, tpre32, s: int, t: int, m: int,
+                    bare: bool, allow_fall: bool) -> Tuple[List, Tree]:
+    """Banded-path reconstruction via per-cell choice recomputation.
+    ``toffP`` is the CUM-shifted offload-time vector (see choose_offload)."""
+    S = tb.S
+    ch, sp = dp_kernels.choose_offload(v, tb, te, toffP, tpre32, s, t, m,
+                                       bare, allow_fall)
+    if ch == 0:
+        raise ValueError(f"infeasible sub-problem ({s},{t},{m},"
+                         f"{'bare' if bare else 'embedded'})")
+    if s == t:
+        return [(F_ALL, s), (BWD, s)], Leaf(s)
+    if ch == 2:
+        ops_rest, tree_rest = _rebuild_banded(
+            v, tb, te, toffP, tpre32, s + 1, t, m - int(v["WABAR"][s]),
+            bare=False, allow_fall=allow_fall)
+        return ([(F_ALL, s)] + ops_rest + [(BWD, s)], AllNode(s, tree_rest))
+    if ch == 1:
+        ops = [(F_CK, s)] + [(F_NONE, j) for j in range(s + 1, sp)]
+        ops_right, tree_right = _rebuild_banded(
+            v, tb, te, toffP, tpre32, sp, t, m - int(v["WA"][sp - 1]),
+            bare=True, allow_fall=allow_fall)
+        ops_left, tree_left = _rebuild_banded(
+            v, tb, te, toffP, tpre32, s, sp - 1, m, bare=bare,
+            allow_fall=allow_fall)
+        return ops + ops_right + ops_left, CkNode(s, sp, tree_right, tree_left)
+    assert bare, "offload branch reconstructed from an embedded-input state"
+    ops = [(F_OFF, s - 1)] + [(F_NONE, j) for j in range(s, sp)]
+    m_right = min(m + int(v["WA"][s - 1]) - int(v["WA"][sp - 1]), S)
+    ops_right, tree_right = _rebuild_banded(
+        v, tb, te, toffP, tpre32, sp, t, m_right, bare=True,
+        allow_fall=allow_fall)
+    ops_left, tree_left = _rebuild_banded(
+        v, tb, te, toffP, tpre32, s, sp - 1, m, bare=True,
+        allow_fall=allow_fall)
     ops = ops + ops_right + [(PREFETCH, s - 1)] + ops_left
     return ops, OffNode(s, sp, tree_right, tree_left)
 
@@ -252,9 +299,49 @@ def tree_to_schedule(tree: Tree, length: int) -> Schedule:
 # Public API
 # ---------------------------------------------------------------------------
 
+def _solve_offload(chain: Chain, dchain, mem_limit: float, num_slots: int,
+                   allow_fall: bool, impl: str, m_use_fn) -> Solution:
+    """Shared fill + rebuild for the two offload entry points.  ``m_use_fn``
+    maps the top-level feasibility row to ``(m, reported_budget)`` or None."""
+    L, S = dchain.length, num_slots
+    v = _views(dchain)
+    if impl == "reference":
+        tables = _OffloadTables(L, S)
+        _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
+        top = tables.Cb[1, L + 1]
+        table_bytes = tables.nbytes
+    else:
+        tb, te = dp_kernels.fill_offload(dchain, S, allow_fall=allow_fall,
+                                         v=v)
+        top = tb.row(1, L + 1)
+        table_bytes = tb.nbytes + te.nbytes
+    picked = m_use_fn(top)
+    if picked is None:
+        return Solution(False, INFEASIBLE, None, None, mem_limit, num_slots,
+                        0, table_bytes)
+    m_use, budget = picked
+    if impl == "reference":
+        ops, tree = _rebuild(v, dchain, tables, 1, L + 1, m_use, bare=True)
+        expected = float(top[m_use])
+    else:
+        toffP = (dchain.chain.offload_times()
+                 + np.asarray(v["CUM_UF"][:L + 1])
+                 ).astype(dp_kernels.COST_DTYPE)
+        tpre32 = dchain.chain.prefetch_times().astype(dp_kernels.COST_DTYPE)
+        ops, tree = _rebuild_banded(v, tb, te, toffP, tpre32, 1, L + 1,
+                                    m_use, bare=True, allow_fall=allow_fall)
+        expected = None
+    sched = Schedule(L, ops)
+    if expected is None:
+        expected = float(simulate(chain, sched).time)
+    return Solution(True, expected, sched, tree, budget, num_slots, m_use,
+                    table_bytes)
+
+
 def solve_optimal_offload(chain: Chain, mem_limit: float,
-                          num_slots: int = 500,
-                          allow_fall: bool = True) -> Solution:
+                          num_slots: int = 500, allow_fall: bool = True,
+                          impl: Optional[str] = None,
+                          cache: bool = True) -> Solution:
     """Optimal persistent three-tier schedule under ``mem_limit`` *device*
     memory.  Host memory is assumed abundant (simulate the schedule with
     ``host_mem_limit`` to check the host peak).
@@ -265,42 +352,53 @@ def solve_optimal_offload(chain: Chain, mem_limit: float,
     """
     if chain.host is None or not chain.host.enabled:
         return _solve_optimal_two_tier(chain, mem_limit, num_slots=num_slots,
-                                       allow_fall=allow_fall)
+                                       allow_fall=allow_fall, impl=impl,
+                                       cache=cache)
+    impl = _resolve_impl(impl)
     dchain = chain.discretize(mem_limit, num_slots)
-    L, S = dchain.length, num_slots
-    tables = _OffloadTables(L, S)
-    _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
+    m_top = num_slots - int(dchain.wa[0])
 
-    m_top = S - int(dchain.wa[0])
-    if m_top < 0 or not np.isfinite(tables.Cb[1, L + 1, m_top]):
-        return Solution(False, INFEASIBLE, None, None, mem_limit, num_slots,
-                        max(m_top, 0), tables.nbytes)
-    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_top, bare=True)
-    sched = Schedule(L, ops)
-    return Solution(True, float(tables.Cb[1, L + 1, m_top]), sched, tree,
-                    mem_limit, num_slots, m_top, tables.nbytes)
+    def pick(top):
+        if m_top < 0 or not np.isfinite(top[m_top]):
+            return None
+        return m_top, mem_limit
+
+    def solve() -> Solution:
+        sol = _solve_offload(chain, dchain, mem_limit, num_slots, allow_fall,
+                             impl, pick)
+        if not sol.feasible:
+            sol = dataclasses.replace(sol, slots_used=max(m_top, 0))
+        return sol
+
+    return solver_cache.memoize_solve("solve_optimal_offload", impl, chain,
+                                      dchain, num_slots, allow_fall, cache,
+                                      solve)
 
 
 def solve_min_device_memory(chain: Chain, num_slots: int = 500,
-                            allow_fall: bool = True) -> Solution:
+                            allow_fall: bool = True,
+                            impl: Optional[str] = None,
+                            cache: bool = True) -> Solution:
     """Smallest feasible *device* budget in the three-tier model — the floor
     below the two-tier ``solve_min_memory`` that offloading unlocks."""
     if chain.host is None or not chain.host.enabled:
         from ..core.solver import solve_min_memory
         return solve_min_memory(chain, num_slots=num_slots,
-                                allow_fall=allow_fall)
+                                allow_fall=allow_fall, impl=impl, cache=cache)
+    impl = _resolve_impl(impl)
     peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
     dchain = chain.discretize(peak, num_slots)
-    L, S = dchain.length, num_slots
-    tables = _OffloadTables(L, S)
-    _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
     w0 = int(dchain.wa[0])
-    feasible = np.where(np.isfinite(tables.Cb[1, L + 1]))[0]
-    if len(feasible) == 0:
-        return Solution(False, INFEASIBLE, None, None, peak, num_slots, 0,
-                        tables.nbytes)
-    m_min = int(feasible[0])
-    ops, tree = _rebuild(dchain, tables, 1, L + 1, m_min, bare=True)
-    budget = (m_min + w0) * dchain.slot_size  # physical memory incl. a^0
-    return Solution(True, float(tables.Cb[1, L + 1, m_min]), Schedule(L, ops),
-                    tree, budget, num_slots, m_min, tables.nbytes)
+
+    def pick(top):
+        feasible = np.where(np.isfinite(top))[0]
+        if len(feasible) == 0:
+            return None
+        m_min = int(feasible[0])
+        return m_min, (m_min + w0) * dchain.slot_size  # physical incl. a^0
+
+    return solver_cache.memoize_solve(
+        "solve_min_device_memory", impl, chain, dchain, num_slots,
+        allow_fall, cache,
+        lambda: _solve_offload(chain, dchain, peak, num_slots, allow_fall,
+                               impl, pick))

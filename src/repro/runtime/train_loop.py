@@ -123,6 +123,12 @@ def run_training(cfg, loop: TrainLoopConfig, mesh=None,
         if tree is not None:
             log_fn(f"[rotor] plan: {count_checkpoint_scopes(tree)} checkpoint "
                    f"scopes over {model.n_stages()} stages")
+        from ..core import solver_cache
+        st = solver_cache.stats()
+        if st["hits"] or st["misses"]:
+            log_fn(f"[plan] solver cache: {st['hits']} hits / "
+                   f"{st['misses']} misses — identical relaunches skip the "
+                   f"DP fill")
         if offload_plan is not None:
             step_fn = _make_offload_step(model, opt_cfg,
                                          offload_plan.schedule, lr_fn)

@@ -4,6 +4,12 @@ import os
 # subprocess); also keep XLA quiet and deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Keep the solver cache memory-only during tests: a fresh process state per
+# run, no reads from (or writes to) the developer's ~/.cache — otherwise a
+# broken DP fill could go green against Solutions cached by an earlier run.
+# Cache tests point REPRO_SOLVER_CACHE_DIR at a tmpdir explicitly.
+os.environ.setdefault("REPRO_SOLVER_CACHE_DIR", "")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,185 @@
+"""Kernel equivalence: the banded, split-batched DP kernels (the default
+``impl="banded"``) must reproduce the retained slow reference path
+(``impl="reference"``, the seed per-cell float64 fill) exactly — same
+``expected_time``, same feasibility frontier, and simulator-valid schedules —
+on randomized chains with and without a host model.
+
+The test chains have integer stage costs and dyadic host-transfer times, so
+every DP quantity is exactly representable in float32 and the comparison is
+bit-exact, not approximate.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import dp_kernels
+from repro.core.chain import Chain, HostTransferModel
+from repro.core.schedule import Schedule, simulate
+from repro.core.solver import _Tables, _fill_tables, solve_min_memory, solve_optimal
+from repro.offload.solver import (_OffloadTables, _fill_tables_offload,
+                                  solve_min_device_memory,
+                                  solve_optimal_offload)
+
+from helpers import random_chain
+
+
+def _dyadic_host(rng) -> HostTransferModel:
+    """Host link whose transfer times are exact in float32 (dyadic)."""
+    return HostTransferModel(
+        bandwidth_d2h=float(rng.choice([0.5, 1.0, 4.0])),
+        latency=float(rng.choice([0.0, 0.25])))
+
+
+def _budgets(ch, fracs):
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    return [float(math.ceil(peak * f)) for f in fracs]
+
+
+# ---------------------------------------------------------------------------
+# table-level equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("allow_fall", [True, False])
+def test_two_tier_tables_bit_equal(seed, allow_fall):
+    rng = np.random.default_rng(seed)
+    ch = random_chain(rng, max_len=6)
+    for m in _budgets(ch, (0.4, 0.7, 1.0)):
+        S = int(m)
+        dchain = ch.discretize(m, S)
+        ref = _Tables(dchain.length, S)
+        _fill_tables(dchain, ref, allow_fall=allow_fall)
+        band = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall)
+        L = dchain.length
+        for s in range(1, L + 2):
+            for t in range(s, L + 2):
+                assert np.array_equal(ref.C[s, t].astype(np.float32),
+                                      band.row(s, t), equal_nan=True), (s, t)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("allow_fall", [True, False])
+def test_offload_tables_bit_equal(seed, allow_fall):
+    rng = np.random.default_rng(100 + seed)
+    ch = random_chain(rng, max_len=5).with_host(_dyadic_host(
+        np.random.default_rng(100 + seed)))
+    for m in _budgets(ch, (0.3, 0.6, 1.0)):
+        S = int(m)
+        dchain = ch.discretize(m, S)
+        ref = _OffloadTables(dchain.length, S)
+        _fill_tables_offload(dchain, ref, allow_fall=allow_fall)
+        tb, te = dp_kernels.fill_offload(dchain, S, allow_fall=allow_fall)
+        L = dchain.length
+        for s in range(1, L + 2):
+            for t in range(s, L + 2):
+                assert np.array_equal(ref.Cb[s, t].astype(np.float32),
+                                      tb.row(s, t), equal_nan=True), (s, t)
+                assert np.array_equal(ref.Ce[s, t].astype(np.float32),
+                                      te.row(s, t), equal_nan=True), (s, t)
+
+
+# ---------------------------------------------------------------------------
+# solution-level equivalence (schedules validated by the simulator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(10))
+def test_two_tier_solutions_match_reference(seed):
+    rng = np.random.default_rng(seed)
+    ch = random_chain(rng, max_len=6)
+    for m in _budgets(ch, (0.4, 0.7, 1.0)):
+        S = int(m)
+        for allow_fall in (True, False):
+            b = solve_optimal(ch, m, num_slots=S, allow_fall=allow_fall,
+                              cache=False)
+            r = solve_optimal(ch, m, num_slots=S, allow_fall=allow_fall,
+                              impl="reference", cache=False)
+            assert b.feasible == r.feasible
+            if not b.feasible:
+                continue
+            assert b.expected_time == r.expected_time
+            res = simulate(ch, b.schedule, m + 1e-6)
+            assert res.valid, res.error
+            assert abs(res.time - b.expected_time) < 1e-12
+            # the ISSUE's table-memory criterion: >= 4x smaller than the seed
+            assert b.table_bytes * 4 <= r.table_bytes
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_offload_solutions_match_reference(seed):
+    rng = np.random.default_rng(500 + seed)
+    ch = random_chain(rng, max_len=5).with_host(_dyadic_host(rng))
+    for m in _budgets(ch, (0.3, 0.6, 1.0)):
+        S = int(m)
+        b = solve_optimal_offload(ch, m, num_slots=S, cache=False)
+        r = solve_optimal_offload(ch, m, num_slots=S, impl="reference",
+                                  cache=False)
+        assert b.feasible == r.feasible
+        if not b.feasible:
+            continue
+        assert b.expected_time == r.expected_time
+        res = simulate(ch, b.schedule, m + 1e-6)
+        assert res.valid, res.error
+        assert abs(res.time - b.expected_time) < 1e-12
+        assert b.table_bytes * 4 <= r.table_bytes
+
+
+def test_feasibility_frontier_matches_reference():
+    """solve_min_memory picks the same smallest feasible slot count (the
+    frontier of finite top-row entries) on both implementations."""
+    for seed in range(8):
+        rng = np.random.default_rng(50 + seed)
+        ch = random_chain(rng, max_len=5)
+        b = solve_min_memory(ch, num_slots=120, cache=False)
+        r = solve_min_memory(ch, num_slots=120, impl="reference", cache=False)
+        assert b.feasible == r.feasible
+        if b.feasible:
+            assert b.slots_used == r.slots_used
+            assert b.mem_limit == r.mem_limit
+            assert b.expected_time == r.expected_time
+
+
+def test_min_device_memory_matches_reference():
+    for seed in range(8):
+        rng = np.random.default_rng(70 + seed)
+        ch = random_chain(rng, max_len=5).with_host(_dyadic_host(rng))
+        b = solve_min_device_memory(ch, num_slots=120, cache=False)
+        r = solve_min_device_memory(ch, num_slots=120, impl="reference",
+                                    cache=False)
+        assert b.feasible == r.feasible
+        if b.feasible:
+            assert b.slots_used == r.slots_used
+            assert b.mem_limit == r.mem_limit
+            assert b.expected_time == r.expected_time
+
+
+def test_oversized_activation_falls_back_to_gather():
+    """Chains with an activation bigger than the whole budget exercise the
+    capped (non-sliced) C3 path and the all-inf R rows."""
+    ch = Chain.make(uf=[1.0, 1.0, 0.0], ub=[1.0, 1.0, 0.0],
+                    wa=[1.0, 40.0, 1.0], wabar=[2.0, 2.0, 0.0],
+                    host=HostTransferModel(bandwidth_d2h=1.0))
+    # budget of 8 slots, slot size 1: WA = [1, 40, 1] — 40 > S+1
+    b = solve_optimal_offload(ch, 8.0, num_slots=8, cache=False)
+    r = solve_optimal_offload(ch, 8.0, num_slots=8, impl="reference",
+                              cache=False)
+    assert b.feasible == r.feasible
+    if b.feasible:
+        assert b.expected_time == r.expected_time
+
+
+def test_banded_rebuild_matches_stored_costs():
+    """The recomputed branch decisions reconstruct schedules whose simulated
+    cost equals the banded table's top-cell value (float32)."""
+    rng = np.random.default_rng(3)
+    ch = random_chain(rng, max_len=6)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    m = float(math.ceil(peak * 0.6))
+    S = int(m)
+    sol = solve_optimal(ch, m, num_slots=S, cache=False)
+    if sol.feasible:
+        dchain = ch.discretize(m, S)
+        tab = dp_kernels.fill_two_tier(dchain, S)
+        top = tab.row(1, dchain.length + 1)[sol.slots_used]
+        assert np.float32(sol.expected_time) == top

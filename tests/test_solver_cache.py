@@ -1,0 +1,159 @@
+"""Solver-cache semantics: hit/miss accounting, key sensitivity to chain
+edits and solve flags, on-disk round-trips across cache instances, and the
+corrupted-entry fallback to a fresh solve."""
+
+import math
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import dp_kernels, solver_cache
+from repro.core.chain import Chain, HostTransferModel
+from repro.core.schedule import Schedule, simulate
+from repro.core.solver import solve_optimal
+from repro.offload.solver import solve_optimal_offload
+
+from helpers import random_chain
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_SOLVER_CACHE", raising=False)
+    monkeypatch.setenv("REPRO_SOLVER_CACHE_DIR", str(tmp_path))
+    solver_cache.configure()
+    yield tmp_path
+    # drop the singleton; the next user lazily rebuilds it from the (restored)
+    # environment
+    solver_cache.reset()
+
+
+def _chain_and_budget(seed=0, frac=0.6):
+    rng = np.random.default_rng(seed)
+    ch = random_chain(rng, max_len=5)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    return ch, float(math.ceil(peak * frac))
+
+
+def test_second_solve_is_served_from_cache(cache_dir, monkeypatch):
+    ch, m = _chain_and_budget()
+    sol1 = solve_optimal(ch, m, num_slots=int(m))
+    stats0 = solver_cache.stats()
+    assert stats0["puts"] == 1 and stats0["misses"] == 1
+
+    # a cached call must not touch the fill kernels at all
+    def boom(*a, **k):
+        raise AssertionError("table fill ran on a cache hit")
+    monkeypatch.setattr(dp_kernels, "fill_two_tier", boom)
+
+    sol2 = solve_optimal(ch, m, num_slots=int(m))
+    stats1 = solver_cache.stats()
+    assert stats1["hits"] == 1
+    assert sol2.expected_time == sol1.expected_time
+    assert sol2.schedule.ops == sol1.schedule.ops
+    assert sol2.mem_limit == sol1.mem_limit
+
+
+def test_offload_solve_cached(cache_dir, monkeypatch):
+    rng = np.random.default_rng(4)
+    ch = random_chain(rng, max_len=4).with_host(
+        HostTransferModel(bandwidth_d2h=1.0))
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    m = float(math.ceil(peak))
+    sol1 = solve_optimal_offload(ch, m, num_slots=int(m))
+    assert sol1.feasible
+
+    def boom(*a, **k):
+        raise AssertionError("offload fill ran on a cache hit")
+    monkeypatch.setattr(dp_kernels, "fill_offload", boom)
+
+    sol2 = solve_optimal_offload(ch, m, num_slots=int(m))
+    assert sol2.expected_time == sol1.expected_time
+    assert sol2.schedule.ops == sol1.schedule.ops
+
+
+def test_key_sensitivity(cache_dir):
+    ch, m = _chain_and_budget(seed=1)
+    S = int(m)
+    solve_optimal(ch, m, num_slots=S)
+    base = solver_cache.stats()["misses"]
+
+    # a chain edit must miss
+    edited = Chain.make(uf=np.asarray(ch.uf) + 0.5, ub=ch.ub, wa=ch.wa,
+                        wabar=ch.wabar, of=ch.of, ob=ch.ob)
+    solve_optimal(edited, m, num_slots=S)
+    # allow_fall flips must miss
+    solve_optimal(ch, m, num_slots=S, allow_fall=False)
+    # slot-count changes must miss
+    solve_optimal(ch, m, num_slots=S + 7)
+    # budget changes must miss
+    solve_optimal(ch, m + 1.0, num_slots=S)
+    # attaching a host model must miss (offload delegates two-tier when the
+    # host link is absent, so key on the host params too)
+    solve_optimal(ch.with_host(HostTransferModel(bandwidth_d2h=2.0)), m,
+                  num_slots=S)
+    assert solver_cache.stats()["misses"] == base + 5
+    # and the original still hits
+    solve_optimal(ch, m, num_slots=S)
+    assert solver_cache.stats()["hits"] == 1
+
+
+def test_disk_roundtrip(cache_dir):
+    ch, m = _chain_and_budget(seed=2)
+    sol1 = solve_optimal(ch, m, num_slots=int(m))
+    assert len(list(cache_dir.glob("*.pkl"))) == 1
+
+    # a fresh cache instance (same directory): memory LRU is empty, the
+    # entry must come back from disk
+    solver_cache.configure()
+    sol2 = solve_optimal(ch, m, num_slots=int(m))
+    st = solver_cache.stats()
+    assert st["disk_hits"] == 1 and st["hits"] == 1
+    assert sol2.feasible == sol1.feasible
+    assert sol2.expected_time == sol1.expected_time
+    assert sol2.schedule.ops == sol1.schedule.ops
+    assert type(sol2.tree) is type(sol1.tree)
+
+
+def test_corrupted_entry_falls_back_to_fresh_solve(cache_dir):
+    ch, m = _chain_and_budget(seed=3)
+    sol1 = solve_optimal(ch, m, num_slots=int(m))
+    [entry] = list(cache_dir.glob("*.pkl"))
+
+    entry.write_bytes(b"not a pickle at all")
+    solver_cache.configure()
+    sol2 = solve_optimal(ch, m, num_slots=int(m))
+    st = solver_cache.stats()
+    assert st["disk_errors"] >= 1 and st["misses"] == 1
+    assert sol2.expected_time == sol1.expected_time
+
+    # header/key mismatch (a valid pickle of the wrong thing) also misses
+    entry2 = list(cache_dir.glob("*.pkl"))[0]
+    entry2.write_bytes(pickle.dumps(("wrong-magic", 0, "key", None)))
+    solver_cache.configure()
+    sol3 = solve_optimal(ch, m, num_slots=int(m))
+    assert sol3.expected_time == sol1.expected_time
+
+
+def test_cache_disabled_by_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SOLVER_CACHE", "0")
+    monkeypatch.setenv("REPRO_SOLVER_CACHE_DIR", str(tmp_path))
+    solver_cache.configure()
+    try:
+        ch, m = _chain_and_budget(seed=5)
+        solve_optimal(ch, m, num_slots=int(m))
+        solve_optimal(ch, m, num_slots=int(m))
+        st = solver_cache.stats()
+        assert st["hits"] == 0 and st["puts"] == 0
+        assert list(tmp_path.glob("*.pkl")) == []
+    finally:
+        solver_cache.reset()
+
+
+def test_cache_param_bypass(cache_dir):
+    """cache=False neither reads nor writes the cache (used by benchmarks)."""
+    ch, m = _chain_and_budget(seed=6)
+    solve_optimal(ch, m, num_slots=int(m), cache=False)
+    st = solver_cache.stats()
+    assert st["puts"] == 0 and st["misses"] == 0
+    assert list(cache_dir.glob("*.pkl")) == []
