@@ -2,13 +2,13 @@
 paper's ResNet-style chain, with the host tier priced by the measured
 device↔host copy bandwidth.
 
-Compares, per device budget:
+Compares, per device budget (three ``repro.plan.sweep`` frontiers):
 
-- **optimal**  — the paper's two-tier DP (``solve_optimal``),
+- **optimal**  — the paper's two-tier DP (``tiers=("device",)``),
 - **revolve**  — the AD-model comparator (activations-only checkpoints),
-- **optimal_offload** — the three-tier DP (``repro.offload``), which stays
-  feasible *below* the two-tier ``solve_min_memory`` floor and matches the
-  two-tier schedule wherever PCIe can't pay for itself.
+- **optimal_offload** — the three-tier DP (``tiers=("device", "host")``),
+  which stays feasible *below* the two-tier ``min_memory_plan`` floor and
+  matches the two-tier schedule wherever PCIe can't pay for itself.
 
 Also asserts the subsystem's exactness claim: the offload simulator's
 makespan equals the offload DP's predicted makespan on every feasible point.
@@ -20,10 +20,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (Schedule, execute_schedule, measure_host_bandwidth,
-                        profile_stages_measured, simulate, solve_optimal)
-from repro.core.solver import solve_min_memory
-from repro.offload.solver import solve_min_device_memory, solve_optimal_offload
+from repro.core import (Schedule, measure_host_bandwidth,
+                        profile_stages_measured, simulate)
+from repro.plan import PlanRequest, min_memory_plan, sweep
 
 from .chains import resnet_ish_chain
 
@@ -34,14 +33,15 @@ def run_chain(name: str, stages, params, x,
     host = measure_host_bandwidth()
     chain = profile_stages_measured(stages, params, x, repeats=1, host=host)
     store_all = simulate(chain, Schedule.store_all(chain.length))
-    floor2 = solve_min_memory(chain, num_slots=num_slots)
-    floor3 = solve_min_device_memory(chain, num_slots=num_slots)
+    floor2 = min_memory_plan(chain, num_slots=num_slots)
+    floor3 = min_memory_plan(chain, tiers=("device", "host"),
+                             num_slots=num_slots)
     emit(f"# {name}: host link d2h {host.bandwidth_d2h/1e9:.2f} GB/s, "
          f"h2d {(host.bandwidth_h2d or host.bandwidth_d2h)/1e9:.2f} GB/s")
     emit(f"# {name}: store-all peak {store_all.peak_mem:.3e} B; two-tier "
-         f"floor {floor2.mem_limit:.3e} B; three-tier device floor "
-         f"{floor3.mem_limit:.3e} B "
-         f"({floor3.mem_limit / floor2.mem_limit:.2f}x)")
+         f"floor {floor2.budget_bytes:.3e} B; three-tier device floor "
+         f"{floor3.budget_bytes:.3e} B "
+         f"({floor3.budget_bytes / floor2.budget_bytes:.2f}x)")
 
     rows: List[dict] = []
     mismatches = 0
@@ -49,49 +49,58 @@ def run_chain(name: str, stages, params, x,
     emit("chain,strategy,budget_frac,budget_bytes,predicted_s,sim_peak_dev,"
          "sim_host_peak,transfer_stall_s,n_offloads")
 
-    def row(strategy, frac, budget, sol):
+    def row(strategy, frac, budget, plan):
         nonlocal mismatches
-        sim = simulate(chain, sol.schedule, budget * (1 + 1e-9))
+        sim = simulate(chain, plan.schedule, budget * (1 + 1e-9))
         assert sim.valid, f"{strategy}@{frac}: {sim.error}"
-        if abs(sim.time - sol.expected_time) > 1e-9 * max(1.0, sim.time):
+        if abs(sim.time - plan.expected_time) > 1e-9 * max(1.0, sim.time):
             mismatches += 1
-        n_off = sol.schedule.count("Foff")
+        n_off = plan.schedule.count("Foff")
         r = dict(chain=name, strategy=strategy, budget_frac=frac,
-                 budget=budget, predicted_s=sol.expected_time,
+                 budget=budget, predicted_s=plan.expected_time,
                  peak_dev=sim.peak_mem, host_peak=sim.host_peak_mem,
-                 stall=sim.transfer_stall, n_offloads=n_off, solution=sol)
+                 stall=sim.transfer_stall, n_offloads=n_off, plan=plan)
         rows.append(r)
         emit(f"{name},{strategy},{frac:.2f},{budget:.3e},"
-             f"{sol.expected_time:.4f},{sim.peak_mem:.3e},"
+             f"{plan.expected_time:.4f},{sim.peak_mem:.3e},"
              f"{sim.host_peak_mem:.3e},{sim.transfer_stall:.4f},{n_off}")
         return r
 
     # probe the between-floors band explicitly: that is where the offload
     # plan is feasible while *no* two-tier persistent schedule exists.
-    # (floors are reported at store-all-peak slot scale; solve_optimal at a
-    # given budget rediscretizes, so check infeasibility per-point.)
-    probe = [floor3.mem_limit + f * (floor2.mem_limit - floor3.mem_limit)
+    # (floors are reported at store-all-peak slot scale; a solve at a given
+    # budget rediscretizes, so check infeasibility per-point.)
+    probe = [floor3.budget_bytes
+             + f * (floor2.budget_bytes - floor3.budget_bytes)
              for f in (0.25, 0.5, 0.75)]
     points = sorted({b / store_all.peak_mem for b in probe}
                     | set(budgets))
 
+    pts3 = sweep(chain, points,
+                 PlanRequest(strategy="optimal", tiers=("device", "host"),
+                             num_slots=num_slots),
+                 store_all_peak=store_all.peak_mem)
+    pts2 = sweep(chain, points,
+                 PlanRequest(strategy="optimal", num_slots=num_slots),
+                 store_all_peak=store_all.peak_mem)
+    ptsr = sweep(chain, points,
+                 PlanRequest(strategy="revolve", num_slots=num_slots),
+                 store_all_peak=store_all.peak_mem)
+
     gains = []
-    for frac in points:
-        budget = store_all.peak_mem * frac
-        sol3 = solve_optimal_offload(chain, budget, num_slots=num_slots)
-        sol2 = solve_optimal(chain, budget, num_slots=num_slots)
-        rev = solve_optimal(chain, budget, num_slots=num_slots,
-                            allow_fall=False)
-        if sol2.feasible:
-            row("optimal", frac, budget, sol2)
-        if rev.feasible:
-            row("revolve", frac, budget, rev)
-        if sol3.feasible:
-            row("optimal_offload", frac, budget, sol3)
-            if not sol2.feasible:
+    for p3, p2, pr in zip(pts3, pts2, ptsr):
+        frac, budget = p2.fraction, p2.budget_bytes
+        if p2.feasible:
+            row("optimal", frac, budget, p2.plan)
+        if pr.feasible:
+            row("revolve", frac, budget, pr.plan)
+        if p3.feasible:
+            row("optimal_offload", frac, budget, p3.plan)
+            if not p2.feasible:
                 below_floor_feasible += 1
-            if sol2.feasible:
-                gains.append(sol2.expected_time / sol3.expected_time - 1.0)
+            if p2.feasible:
+                gains.append(p2.plan.expected_time
+                             / p3.plan.expected_time - 1.0)
 
     gain = float(np.max(gains)) if gains else 0.0
     emit(f"# {name}: offload feasible at {below_floor_feasible} budget "
@@ -101,7 +110,7 @@ def run_chain(name: str, stages, params, x,
          f"(must be 0)")
     return {"rows": rows, "mismatches": mismatches,
             "below_floor_feasible": below_floor_feasible,
-            "floor2": floor2.mem_limit, "floor3": floor3.mem_limit,
+            "floor2": floor2.budget_bytes, "floor3": floor3.budget_bytes,
             "max_gain": gain}
 
 
@@ -119,13 +128,13 @@ def wall_clock_point(stages, params, x, rows, emit=print, repeats=2) -> None:
         emit("# wall-clock: no offload-bearing point to run")
         return
     r = offl[0]
-    sol = r["solution"]
+    plan = r["plan"]
     hb = HostBuffer()
-    out = execute_offload_schedule(sol.schedule, stages, params, x,
+    out = execute_offload_schedule(plan.schedule, stages, params, x,
                                    host_buffer=hb)  # warm caches
     t0 = _time.perf_counter()
     for _ in range(repeats):
-        out = execute_offload_schedule(sol.schedule, stages, params, x,
+        out = execute_offload_schedule(plan.schedule, stages, params, x,
                                        host_buffer=HostBuffer())
     import jax
     jax.block_until_ready(out[1])

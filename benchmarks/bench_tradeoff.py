@@ -4,6 +4,10 @@
 heterogeneous conv chain and a transformer chain, with *measured* per-stage
 costs (paper §5.1) and both model-predicted and wall-clock numbers.
 
+The solver-backed curves come from ``repro.plan.sweep`` — the time-vs-budget
+frontier is a first-class API call, not a hand-rolled loop over
+``solve_optimal``.
+
 Also reports the paper's headline metric: throughput gain of optimal over
 the best sequential point at matching memory (§5.4: +17.2% on their GPU
 suite)."""
@@ -17,8 +21,9 @@ import jax
 import numpy as np
 
 from repro.core import (Schedule, best_periodic, execute_schedule,
-                        profile_stages_measured, revolve, simulate,
-                        solve_optimal)
+                        profile_stages_measured, simulate)
+from repro.plan import (Budget, InfeasiblePlanError, PlanRequest, build_plan,
+                        sweep)
 
 from .chains import resnet_ish_chain, transformer_chain
 
@@ -55,15 +60,19 @@ def run_chain(name: str, stages, params, x, batch: int,
     emit("chain,strategy,budget_frac,peak_mem_bytes,predicted_s,wall_s,items_per_s")
     r_store = row("pytorch_store_all", 1.0, store_all, base.time)
 
-    for frac in budgets:
-        m = base.peak_mem * frac
-        sol = solve_optimal(chain, m, num_slots=300)
-        if sol.feasible:
-            row("optimal", frac, sol.schedule, sol.expected_time)
-        rev = revolve(chain, m, num_slots=300)
+    # the two solver-backed frontiers, one sweep() call each
+    opt_pts = sweep(chain, budgets,
+                    PlanRequest(strategy="optimal", num_slots=300),
+                    store_all_peak=base.peak_mem)
+    rev_pts = sweep(chain, budgets,
+                    PlanRequest(strategy="revolve", num_slots=300),
+                    store_all_peak=base.peak_mem)
+    for frac, opt, rev in zip(budgets, opt_pts, rev_pts):
+        if opt.feasible:
+            row("optimal", frac, opt.plan.schedule, opt.plan.expected_time)
         if rev.feasible:
-            row("revolve", frac, rev.schedule, rev.expected_time)
-        got = best_periodic(chain, m)
+            row("revolve", frac, rev.plan.schedule, rev.plan.expected_time)
+        got = best_periodic(chain, base.peak_mem * frac)
         if got is not None:
             k, res, sched = got
             row(f"sequential(k={k})", frac, sched, res.time)
@@ -79,9 +88,14 @@ def run_chain(name: str, stages, params, x, batch: int,
         if not r["strategy"].startswith("sequential"):
             continue
         m = r["peak_mem"]
-        sol = solve_optimal(chain, m * slack, num_slots=slots)
-        if sol.feasible:
-            gains.append(r["predicted_s"] / sol.expected_time - 1.0)
+        try:
+            plan = build_plan(
+                PlanRequest(strategy="optimal",
+                            budget=Budget.bytes(m * slack),
+                            num_slots=slots), chain)
+        except InfeasiblePlanError:
+            continue
+        gains.append(r["predicted_s"] / plan.expected_time - 1.0)
     gain = float(np.mean(gains)) if gains else float("nan")
     gmax = float(np.max(gains)) if gains else float("nan")
     emit(f"# {name}: optimal-vs-sequential speedup at equal memory: "

@@ -1,14 +1,18 @@
-"""Quickstart: the paper's optimal checkpointing on a toy chain in ~40 lines.
+"""Quickstart: the paper's optimal checkpointing on a toy chain, through the
+first-class planning API (`repro.plan`).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Schedule, build_remat_fn, profile_stages_analytic,
-                        simulate, solve_optimal)
-from repro.core.solver import solve_min_memory
+from repro.core import Schedule, profile_stages_analytic, simulate
+from repro.plan import (Budget, MemoryPlan, PlanRequest, build_plan,
+                        min_memory_plan)
 
 # 1) a heterogeneous chain: 6 MLP stages of varying width + a loss stage
 dims = [64, 256, 64, 512, 64, 128, 32]
@@ -25,21 +29,30 @@ chain = profile_stages_analytic(stages, params, x, peak_flops=1e9)
 store_all = simulate(chain, Schedule.store_all(chain.length))
 print(f"store-all: peak={store_all.peak_mem:.0f} B, time={store_all.time:.4f}")
 
-# 3) solve for the optimal persistent schedule midway between the minimum
-#    feasible memory and the store-all peak (Theorem 1)
-floor = solve_min_memory(chain, num_slots=300)
-budget = 0.5 * (floor.mem_limit + store_all.peak_mem)
-print(f"minimum feasible activation memory: {floor.mem_limit:.0f} B "
-      f"({floor.mem_limit/store_all.peak_mem:.0%} of store-all)")
-sol = solve_optimal(chain, budget, num_slots=300)
-res = simulate(chain, sol.schedule)
-print(f"rotor@50%: peak={res.peak_mem:.0f} B ({res.peak_mem/store_all.peak_mem:.0%}),"
-      f" time={res.time:.4f} ({res.time/store_all.time:.2f}x)")
-print("schedule:", " ".join(f"{k}{l}" for k, l in sol.schedule.ops))
+# 3) plan the optimal persistent schedule midway between the minimum
+#    feasible memory and the store-all peak (Theorem 1): a typed request in,
+#    an inspectable MemoryPlan out
+floor = min_memory_plan(chain, num_slots=300)
+print(f"minimum feasible activation memory: {floor.budget_bytes:.0f} B "
+      f"({floor.budget_bytes/store_all.peak_mem:.0%} of store-all)")
+budget = 0.5 * (floor.budget_bytes + store_all.peak_mem)
+plan = build_plan(PlanRequest(strategy="optimal",
+                              budget=Budget.bytes(budget),
+                              num_slots=300), chain)
+print(plan.summary())
+print("schedule:", " ".join(f"{k}{l}" for k, l in plan.schedule.ops))
 
-# 4) run it under jit via the nested-remat compiler — same gradients
-f = build_remat_fn(sol.tree, stages)
-g_rotor = jax.jit(jax.grad(f))(params, x)
+# 4) plans are artifacts: save to disk, reload, and the chain hash refuses a
+#    plan that was solved for a different chain
+path = os.path.join(tempfile.mkdtemp(), "quickstart_plan.pkl")
+plan.save(path)
+plan = MemoryPlan.load(path, chain=chain)   # validated round-trip
+print(f"plan round-tripped through {path}")
+
+# 5) run it under jit via the uniform executor binding — same gradients
+bound = plan.bind(stages)
+assert bound.jittable  # two-tier plan -> nested jax.checkpoint under jit
+g_rotor = jax.jit(jax.grad(bound.forward))(params, x)
 
 
 def plain(params, x):

@@ -23,7 +23,11 @@ def main():
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--policy", default="rotor:x0.6",
-                    help="activation budget: 60%% of the store-all peak")
+                    help="activation budget: 60%% of the store-all peak "
+                         "(any repro.plan policy works, e.g. "
+                         "optimal_offload:x0.4)")
+    ap.add_argument("--num-slots", type=int, default=None,
+                    help="DP discretization slots (default: plan default)")
     args = ap.parse_args()
 
     if args.tiny:
@@ -42,6 +46,7 @@ def main():
 
     loop = TrainLoopConfig(steps=args.steps, global_batch=batch, seq_len=seq,
                            lr=1e-3, warmup=20, policy=args.policy,
+                           num_slots=args.num_slots,
                            ckpt_dir=args.ckpt_dir, ckpt_every=50,
                            log_every=10)
     out = run_training(cfg, loop)

@@ -15,7 +15,7 @@ from .executor import execute_schedule, reference_grads
 from .planner import (measure_host_bandwidth, profile_stages_analytic,
                       profile_stages_measured, residual_bytes)
 from .policies import (PolicyPlan, make_policy_plan, make_policy_tree,
-                       parse_budget)
+                       parse_budget, policy_to_request, resolve_policy)
 
 __all__ = [
     "Chain", "DiscreteChain", "HostTransferModel", "Schedule", "SimResult",
@@ -27,4 +27,5 @@ __all__ = [
     "measure_host_bandwidth", "profile_stages_analytic",
     "profile_stages_measured", "residual_bytes", "PolicyPlan",
     "make_policy_plan", "make_policy_tree", "parse_budget",
+    "policy_to_request", "resolve_policy",
 ]

@@ -1,4 +1,12 @@
-"""Config-facing remat policies: string → schedule tree / execution plan.
+"""Back-compat shim: remat policy *strings* → :mod:`repro.plan` requests.
+
+The planning surface of this repo is :mod:`repro.plan` — typed
+:class:`~repro.plan.PlanRequest` in, inspectable/serializable
+:class:`~repro.plan.MemoryPlan` out.  This module keeps the historical
+string grammar working: every string maps onto exactly one request
+(:func:`repro.plan.compat.policy_to_request` — the migration table) and
+resolves through the single path :func:`repro.plan.compat.resolve_policy`;
+no policy-prefix dispatch exists outside :mod:`repro.plan`.
 
 ``make_policy_tree(policy, chain)`` accepts:
 
@@ -20,53 +28,45 @@
 
 The returned tree feeds :func:`repro.core.rematerialize.build_remat_fn` —
 which is why ``make_policy_tree`` refuses offload-bearing plans (XLA cannot
-express host DMA from a remat tree): use :func:`make_policy_plan` and run the
-plan's ``schedule`` through the eager offload executor instead.
+express host DMA from a remat tree): use :func:`make_policy_plan` (or
+:func:`repro.plan.build_plan` directly) and run the plan through
+``plan.bind(...)`` / the eager offload executor instead.
 
-All solver-backed policies (``rotor:*``, ``revolve:*``, ``optimal_offload:*``)
-are memoized through :mod:`repro.core.solver_cache`: resolving the same
-policy on the same profiled chain — a relaunch, or one point of a budget
-sweep revisited — returns the cached ``Solution`` without filling DP tables.
-``REPRO_SOLVER_CACHE=0`` disables this; ``REPRO_SOLVER_CACHE_DIR`` moves the
-on-disk store.
+All solver-backed policies are memoized through
+:mod:`repro.core.solver_cache` exactly as before — resolving the same policy
+on the same profiled chain returns the cached ``Solution`` without filling
+DP tables.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Optional
 
-from .chain import Chain, HostTransferModel
-from .rematerialize import full_remat_tree, periodic_tree, sequential_tree
-from .schedule import Schedule, simulate
-from .solver import Solution, Tree, solve_optimal
+from ..plan import MemoryPlan, parse_size
+from ..plan.compat import (DOCUMENTED_POLICIES, parse_budget,
+                           policy_to_request, resolve_policy)
+from .chain import Chain
+from .schedule import Schedule
+from .solver import Solution, Tree
 
-_UNITS = {"K": 1e3, "M": 1e6, "G": 1e9, "T": 1e12}
+__all__ = ["DOCUMENTED_POLICIES", "PolicyPlan", "make_policy_plan",
+           "make_policy_tree", "parse_budget", "policy_to_request",
+           "resolve_policy"]
 
 
 def _parse_size(spec: str) -> float:
-    m = re.fullmatch(r"([\d.eE+-]+)([KMGT]?)", spec.strip())
-    if not m:
-        raise ValueError(f"cannot parse size {spec!r}")
-    return float(m.group(1)) * _UNITS.get(m.group(2), 1.0)
-
-
-def parse_budget(spec: str, chain: Optional[Chain]) -> float:
-    spec = spec.strip()
-    if spec.startswith("x"):
-        if chain is None:
-            raise ValueError("fractional budget needs a profiled chain")
-        peak = simulate(chain, Schedule.store_all(chain.length)).peak_mem
-        return float(spec[1:]) * peak
-    return _parse_size(spec)
+    """Absolute size with optional K/M/G/T suffix (strict; see
+    :func:`repro.plan.parse_size`)."""
+    return parse_size(spec)
 
 
 @dataclasses.dataclass
 class PolicyPlan:
-    """A resolved policy: the recursion tree (when the plan is expressible as
-    nested remat) and the op schedule (always).  ``uses_offload`` marks plans
-    that need the eager offload executor."""
+    """A resolved policy (back-compat wrapper around :class:`MemoryPlan`):
+    the recursion tree (when the plan is expressible as nested remat) and the
+    op schedule (always).  ``uses_offload`` marks plans that need the eager
+    offload executor; ``plan`` is the underlying planning artifact."""
 
     policy: str
     tree: Optional[Tree]
@@ -74,89 +74,33 @@ class PolicyPlan:
     solution: Optional[Solution]
     chain: Optional[Chain]
     uses_offload: bool = False
+    plan: Optional[MemoryPlan] = None
 
 
 def make_policy_plan(policy: str, chain: Optional[Chain],
                      length: Optional[int] = None,
-                     num_slots: int = 500) -> PolicyPlan:
+                     num_slots: Optional[int] = None,
+                     impl: Optional[str] = None) -> PolicyPlan:
     """Resolve any policy string — including ``optimal_offload`` — into a
     :class:`PolicyPlan`."""
-    if not policy.startswith("optimal_offload"):
-        tree = make_policy_tree(policy, chain, length=length,
-                                num_slots=num_slots)
-        from .solver import tree_to_schedule
-        L = chain.length if chain is not None else length
-        sched = tree_to_schedule(tree, L)
-        return PolicyPlan(policy, tree, sched, None, chain)
-
-    if chain is None:
-        raise ValueError(f"{policy!r} needs a profiled chain")
-    parts = policy.split(":")
-    if len(parts) < 2:
-        raise ValueError(
-            "optimal_offload policy needs a budget: 'optimal_offload:BUDGET"
-            "[:BW]'")
-    budget = parse_budget(parts[1], chain)
-    host = chain.host
-    if len(parts) >= 3:
-        bw = _parse_size(parts[2])
-        host = HostTransferModel(bandwidth_d2h=bw) if bw > 0 else None
-    elif host is None:
-        host = HostTransferModel.pcie_gen3()
-
-    if host is None or not host.enabled:
-        # zero host bandwidth: the third tier does not exist — two-tier DP
-        sol = solve_optimal(chain, budget, num_slots=num_slots)
-        if not sol.feasible:
-            raise MemoryError(
-                f"optimal_offload (bw=0 fallback): no feasible persistent "
-                f"schedule within {budget:.3e} bytes")
-        return PolicyPlan(policy, sol.tree, sol.schedule, sol, chain,
-                          uses_offload=False)
-
-    from ..offload.solver import solve_optimal_offload, tree_uses_offload
-    hchain = chain.with_host(host)
-    sol = solve_optimal_offload(hchain, budget, num_slots=num_slots)
-    if not sol.feasible:
-        raise MemoryError(
-            f"optimal_offload: no feasible schedule within {budget:.3e} "
-            f"bytes of device memory even with the host tier")
-    return PolicyPlan(policy, sol.tree, sol.schedule, sol, hchain,
-                      uses_offload=tree_uses_offload(sol.tree))
+    plan = resolve_policy(policy, chain, length=length, num_slots=num_slots,
+                          impl=impl)
+    return PolicyPlan(policy, plan.tree, plan.schedule, plan.solution,
+                      plan.chain, uses_offload=plan.uses_offload, plan=plan)
 
 
 def make_policy_tree(policy: str, chain: Optional[Chain],
                      length: Optional[int] = None,
-                     num_slots: int = 500) -> Tree:
-    if chain is not None:
-        length = chain.length
-    if length is None:
-        raise ValueError("need chain or length")
-    if policy == "none":
-        return sequential_tree(length)
-    if policy == "full":
-        return full_remat_tree(length)
-    if policy.startswith("periodic:"):
-        return periodic_tree(length, int(policy.split(":", 1)[1]))
-    if policy.startswith(("rotor:", "revolve:")):
-        if chain is None:
-            raise ValueError(f"{policy!r} needs a profiled chain")
-        kind, spec = policy.split(":", 1)
-        budget = parse_budget(spec, chain)
-        sol = solve_optimal(chain, budget, num_slots=num_slots,
-                            allow_fall=(kind == "rotor"))
-        if not sol.feasible:
-            raise MemoryError(
-                f"{kind}: no feasible persistent schedule within "
-                f"{budget:.3e} bytes for this chain")
-        return sol.tree
-    if policy.startswith("optimal_offload"):
-        plan = make_policy_plan(policy, chain, length=length,
-                                num_slots=num_slots)
-        if plan.uses_offload:
-            raise ValueError(
-                f"{policy!r} resolved to a host-offload plan, which nested "
-                f"remat cannot express — use make_policy_plan() and run "
-                f"plan.schedule through repro.offload.executor")
-        return plan.tree
-    raise ValueError(f"unknown remat policy {policy!r}")
+                     num_slots: Optional[int] = None,
+                     impl: Optional[str] = None) -> Tree:
+    """Resolve a policy string into a remat-expressible recursion tree
+    (raises for plans that need the host tier — those cannot run under
+    ``jax.checkpoint``)."""
+    plan = resolve_policy(policy, chain, length=length, num_slots=num_slots,
+                          impl=impl)
+    if plan.uses_offload:
+        raise ValueError(
+            f"{policy!r} resolved to a host-offload plan, which nested "
+            f"remat cannot express — use make_policy_plan() and run "
+            f"plan.schedule through repro.offload.executor")
+    return plan.tree

@@ -128,7 +128,8 @@ def _size(chain: Chain, item: Item) -> float:
 
 def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
              track_checkpoint_persistence: bool = False,
-             host_mem_limit: float | None = None) -> SimResult:
+             host_mem_limit: float | None = None,
+             trace: List[dict] | None = None) -> SimResult:
     """Execute ``schedule`` on the cost model; returns validity, makespan, peak.
 
     If ``mem_limit`` is given, the schedule is invalid if any during-op memory
@@ -140,6 +141,11 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
     ``chain.host``; device and host peaks are tracked separately, and
     ``host_mem_limit`` bounds the host tier the same way ``mem_limit`` bounds
     the device.
+
+    ``trace`` (optional list) collects one record per executed op —
+    ``{"op", "arg", "t_start", "t_end", "device_mem", "host_mem"}`` with the
+    memory values *after* the op commits — the per-op timeline surfaced by
+    ``repro.plan.MemoryPlan.timeline()``.
     """
     L = chain.length
     live: dict = {("a", 0): True, ("delta", L + 1): True}
@@ -164,8 +170,14 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
             return True, ("abar", i)
         return False, None
 
+    def _rec(kind, arg, t0, t1):
+        if trace is not None:
+            trace.append({"op": kind, "arg": arg, "t_start": t0, "t_end": t1,
+                          "device_mem": mem, "host_mem": host_mem})
+
     for op in schedule.ops:
         kind, arg = op
+        t_op = t
         if kind == FREE:
             item = arg  # type: ignore[assignment]
             if item not in live:
@@ -174,6 +186,7 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 persistent = False
             mem -= _size(chain, item)
             del live[item]
+            _rec(kind, item, t_op, t)
             continue
 
         if kind in _OFFLOAD_KINDS:
@@ -226,6 +239,7 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 ckpt.add(("a", i))
                 host_copies.discard(i)
                 host_mem -= w
+            _rec(kind, i, t_op, t)
             continue
 
         l = int(arg)  # stage index, 1..L+1
@@ -293,6 +307,7 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 mem += _size(chain, out)
         else:
             return SimResult(False, t, peak, f"unknown op kind {kind}")
+        _rec(kind, l, t_op, t)
 
     if ("delta", 0) not in live:
         return SimResult(False, t, peak, "schedule did not produce δ^0")

@@ -72,6 +72,31 @@ def code_fingerprint() -> str:
     return _code_fingerprint
 
 
+def _hash_host(h, host) -> None:
+    if host is None:
+        h.update(b"nohost")
+    else:
+        h.update(np.array(
+            [host.bandwidth_d2h,
+             -1.0 if host.bandwidth_h2d is None else host.bandwidth_h2d,
+             host.latency], dtype=np.float64).tobytes())
+
+
+def chain_fingerprint(chain) -> str:
+    """Content hash of a :class:`~repro.core.chain.Chain` — all continuous
+    cost/size arrays plus the host-link model.  Shared by the solver cache
+    and by :mod:`repro.plan` plan serialization, so a saved ``MemoryPlan``
+    validates against exactly the chain it was solved for."""
+    h = hashlib.sha256()
+    h.update(b"repro-chain\0")
+    for arr in (chain.uf, chain.ub, chain.wa, chain.wabar, chain.wdelta,
+                chain.of, chain.ob):
+        h.update(np.ascontiguousarray(arr, dtype=np.float64).tobytes())
+        h.update(b"\0")
+    _hash_host(h, chain.host)
+    return h.hexdigest()
+
+
 def _default_dir() -> Optional[Path]:
     env = os.environ.get("REPRO_SOLVER_CACHE_DIR")
     if env is not None:
@@ -128,14 +153,7 @@ class SolverCache:
             h.update(np.ascontiguousarray(arr, dtype=np.int64).tobytes())
         for arr in (chain.uf, chain.ub, chain.wa):
             h.update(np.ascontiguousarray(arr, dtype=np.float64).tobytes())
-        host = chain.host
-        if host is None:
-            h.update(b"nohost")
-        else:
-            h.update(np.array(
-                [host.bandwidth_d2h,
-                 -1.0 if host.bandwidth_h2d is None else host.bandwidth_h2d,
-                 host.latency], dtype=np.float64).tobytes())
+        _hash_host(h, chain.host)
         return h.hexdigest()
 
     # -- lookup / store ----------------------------------------------------

@@ -123,6 +123,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         },
         "roofline": roof.to_json(),
         "rotor": None,
+        # the full planning artifact (strategy, budget, predicted makespan,
+        # device/host peaks, op counts) — repro.plan.MemoryPlan.stats()
+        "plan": (extra["plan"].stats() if extra.get("plan") is not None
+                 else None),
     }
     if extra.get("tree") is not None:
         from ..core.rematerialize import count_checkpoint_scopes

@@ -13,8 +13,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import solver_cache
 from ..core.chain import Chain
-from ..core.policies import make_policy_plan, make_policy_tree
-from ..core.solver import solve_optimal
+from ..core.policies import resolve_policy
+from ..plan import MemoryPlan, two_tier_fallback
 from ..distributed.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
                                     axis_rules, current_rules, spec_for)
 from ..models.flops import stage_flops
@@ -123,49 +123,49 @@ def plan_chain(model: StagedLM, batch_specs: Dict, mesh, rules) -> Chain:
     return chain
 
 
-def _two_tier_or_min_memory(chain: Chain, budget: float, why: str):
-    """Best two-tier solution at ``budget``; if that is unreachable even with
-    maximal recompute, fall back to the minimum-memory persistent schedule
-    and report its true need."""
-    from ..core.solver import solve_min_memory
+def plan_training(model: StagedLM, batch_specs: Dict, mesh, rules,
+                  policy: Optional[str] = None, *,
+                  num_slots: Optional[int] = None,
+                  impl: Optional[str] = None,
+                  jit_only: bool = False
+                  ) -> Tuple[Optional[MemoryPlan], Optional[Chain]]:
+    """Resolve the remat policy for (model × shape × mesh) into a
+    :class:`~repro.plan.MemoryPlan` (None = store-all, no remat).
 
-    sol = solve_optimal(chain, budget, num_slots=500)
-    if not sol.feasible:
-        sol = solve_min_memory(chain, num_slots=500)
-        if not sol.feasible:
-            raise MemoryError("rotor: no feasible persistent schedule")
-        print(f"[rotor] {why}; min-memory schedule needs "
-              f"{sol.mem_limit/2**30:.2f} GiB of activations", flush=True)
-    return sol
+    ``num_slots``/``impl`` thread uniformly into the underlying
+    :class:`~repro.plan.PlanRequest` (None = the plan defaults) — this is
+    the one place launch-side solver knobs are configured.
 
-
-def plan_rotor_tree(model: StagedLM, batch_specs: Dict, mesh, rules,
-                    policy: Optional[str] = None):
-    """Resolve cfg.remat_policy into a schedule tree (None = store-all)."""
+    ``jit_only=True`` is the XLA-path contract: host DMA cannot be expressed
+    from a remat tree, so an offload-bearing plan is degraded to the best
+    two-tier plan at the same device budget (the eager runtime path — see
+    ``runtime/train_loop.py`` — runs the true offload schedule instead).
+    """
     cfg = model.cfg
     policy = policy if policy is not None else cfg.remat_policy
     if policy == "none":
         return None, None
     chain = plan_chain(model, batch_specs, mesh, rules)
-    if policy == "rotor:auto":
-        params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-        budget = activation_budget_bytes(params_spec, mesh.size)
-        sol = _two_tier_or_min_memory(
-            chain, budget, f"budget {budget/2**30:.2f} GiB/dev infeasible")
-        return sol.tree, chain
-    if policy.startswith("optimal_offload"):
-        # the jitted XLA path cannot express host DMA; when the offload plan
-        # actually uses the host tier, approximate with the best two-tier
-        # tree at the same device budget (the eager runtime path — see
-        # runtime/train_loop.py — runs the true offload schedule instead)
-        plan = make_policy_plan(policy, chain)
-        if not plan.uses_offload:
-            return plan.tree, chain
-        sol = _two_tier_or_min_memory(
-            chain, plan.solution.mem_limit,
-            "offload plan needs the host tier; jitted two-tier fallback")
-        return sol.tree, chain
-    return make_policy_tree(policy, chain), chain
+    plan = resolve_policy(
+        policy, chain, num_slots=num_slots, impl=impl,
+        # only 'auto' budgets need the parameter footprint — trace lazily
+        auto_budget=lambda: activation_budget_bytes(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)), mesh.size))
+    if jit_only and plan.uses_offload:
+        print("[plan] offload plan needs the host tier; jitted two-tier "
+              "fallback at the same device budget", flush=True)
+        plan = two_tier_fallback(plan, chain)
+    return plan, chain
+
+
+def plan_rotor_tree(model: StagedLM, batch_specs: Dict, mesh, rules,
+                    policy: Optional[str] = None):
+    """Back-compat wrapper: resolve the policy into a jit-expressible
+    schedule tree (None = store-all).  New code should use
+    :func:`plan_training` and keep the full :class:`MemoryPlan`."""
+    plan, chain = plan_training(model, batch_specs, mesh, rules, policy,
+                                jit_only=True)
+    return (plan.tree if plan is not None else None), chain
 
 
 # ---------------------------------------------------------------------------
@@ -251,7 +251,9 @@ def build_cell(arch_cfg, shape_spec, mesh, policy: Optional[str] = None,
                            mesh, rules)
 
     if shape_spec.kind == "train":
-        tree, chain = plan_rotor_tree(model, batch_specs, mesh, rules, policy)
+        plan, chain = plan_training(model, batch_specs, mesh, rules, policy,
+                                    jit_only=True)
+        tree = plan.tree if plan is not None else None
         st = solver_cache.stats()
         if st["hits"] or st["misses"]:
             # repeated launches and budget sweeps are served from the
@@ -272,7 +274,8 @@ def build_cell(arch_cfg, shape_spec, mesh, policy: Optional[str] = None,
         jitted = jax.jit(fn, donate_argnums=(0, 1),
                          out_shardings=out_shardings)
         args = (params_sds, opt_sds, batch_sds, step_sds)
-        return jitted, args, rules, {"tree": tree, "chain": chain}
+        return jitted, args, rules, {"tree": tree, "chain": chain,
+                                     "plan": plan}
 
     if shape_spec.kind == "prefill":
         fn = make_prefill_step(model)

@@ -35,7 +35,15 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--policy", default=None,
                     help="remat policy: none|full|periodic:K|rotor:auto|"
-                         "rotor:BYTES|revolve:BYTES")
+                         "rotor:BYTES|revolve:BYTES|"
+                         "optimal_offload:BYTES[:BW] (each maps onto a "
+                         "repro.plan.PlanRequest — see README 'Planning "
+                         "API')")
+    ap.add_argument("--num-slots", type=int, default=None,
+                    help="DP discretization slots (default: plan default)")
+    ap.add_argument("--solver-impl", default=None,
+                    choices=("banded", "reference"),
+                    help="DP fill kernels (default: banded / REPRO_DP_IMPL)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -54,7 +62,9 @@ def main(argv=None) -> int:
 
     loop = TrainLoopConfig(steps=args.steps, global_batch=args.global_batch,
                            seq_len=args.seq_len, lr=args.lr,
-                           policy=args.policy, ckpt_dir=args.ckpt_dir,
+                           policy=args.policy, num_slots=args.num_slots,
+                           solver_impl=args.solver_impl,
+                           ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)
     out = run_training(cfg, loop, mesh=mesh)
     print(f"[train] done: {len(out['losses'])} steps, "

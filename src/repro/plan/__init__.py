@@ -1,0 +1,41 @@
+"""`repro.plan` — the first-class memory-planning API.
+
+The paper's promise is "give us a memory limit, we pick the optimal
+schedule"; this package is that surface.  A typed :class:`PlanRequest`
+(budget as bytes / fraction / auto, storage tiers, host link, slot
+discretization, DP kernel impl) resolves through :func:`build_plan` into a
+:class:`MemoryPlan` — the inspectable, serializable planning artifact that
+carries the schedule, the recursion tree, the solver
+:class:`~repro.core.solver.Solution`, simulator-exact predicted
+makespan/peaks, and the right executor binding
+(:meth:`MemoryPlan.bind` / :meth:`MemoryPlan.execute`).
+
+- :func:`sweep` returns the time-vs-budget frontier benchmarks used to
+  hand-roll; :func:`min_memory_plan` the feasibility floor per tier combo.
+- :mod:`repro.plan.registry` maps storage-tier combinations to solver entry
+  points — the extension hook every future tier/solver plugs into.
+- Plans :meth:`~MemoryPlan.save` to disk and :meth:`~MemoryPlan.load` back,
+  validated by the chain content hash shared with the solver cache
+  (:class:`StalePlanError` on mismatch).
+
+The old policy strings (``"rotor:x0.6"``, ``"optimal_offload:8G:12G"``, …)
+remain available through the thin shim in :mod:`repro.core.policies`, which
+maps each string onto exactly one ``PlanRequest``.
+"""
+
+from .api import (SweepPoint, build_plan, min_memory_plan, sweep,
+                  two_tier_fallback)
+from .compat import (DOCUMENTED_POLICIES, policy_to_request, resolve_policy)
+from .plan import BoundPlan, InfeasiblePlanError, MemoryPlan, StalePlanError
+from .registry import SolverEntry, available_solvers, register_solver, solver_for
+from .request import (DEFAULT_NUM_SLOTS, Budget, PlanRequest, parse_size,
+                      SOLVER_STRATEGIES, STRUCTURAL_STRATEGIES)
+
+__all__ = [
+    "Budget", "PlanRequest", "MemoryPlan", "BoundPlan", "SweepPoint",
+    "SolverEntry", "InfeasiblePlanError", "StalePlanError",
+    "build_plan", "sweep", "min_memory_plan", "two_tier_fallback",
+    "register_solver", "solver_for", "available_solvers", "parse_size",
+    "policy_to_request", "resolve_policy", "DOCUMENTED_POLICIES",
+    "DEFAULT_NUM_SLOTS", "SOLVER_STRATEGIES", "STRUCTURAL_STRATEGIES",
+]

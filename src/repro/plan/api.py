@@ -1,0 +1,199 @@
+"""`repro.plan` entry points: ``build_plan`` (request → plan) and ``sweep``
+(the time-vs-budget frontier).
+
+``build_plan`` is the single place a planning decision is made: it resolves
+the budget, picks the solver from the tier registry, runs it (through the
+persistent solver cache), applies the infeasibility policy, and wraps the
+result into a :class:`~repro.plan.plan.MemoryPlan` with simulator-exact
+predicted numbers.  Everything above it — the policy-string shim, the train
+loop, launch, benchmarks — only ever handles requests and plans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Union
+
+from ..core.chain import Chain, HostTransferModel
+from ..core.schedule import Schedule, simulate
+from ..core.solver import Solution, tree_to_schedule
+from ..core.solver_cache import chain_fingerprint
+from .plan import InfeasiblePlanError, MemoryPlan
+from .registry import solver_for
+from .request import STRUCTURAL_STRATEGIES, Budget, PlanRequest
+
+
+def _structural_tree(request: PlanRequest, length: int):
+    from ..core.rematerialize import (full_remat_tree, periodic_tree,
+                                      sequential_tree)
+    if request.strategy == "store_all":
+        return sequential_tree(length)
+    if request.strategy == "full_remat":
+        return full_remat_tree(length)
+    return periodic_tree(length, request.segments)
+
+
+def _resolve_host(request: PlanRequest, chain: Chain) -> Chain:
+    """For host-tier requests, attach the link model: explicit override →
+    the chain's profiled link → the PCIe-3 x16 constant."""
+    if "host" not in request.tiers:
+        return chain
+    host = request.host or chain.host or HostTransferModel.pcie_gen3()
+    return chain.with_host(host)
+
+
+def _finalize(request: PlanRequest, chain: Optional[Chain], tree,
+              schedule: Schedule, solution: Optional[Solution],
+              budget_bytes: Optional[float], policy: Optional[str]
+              ) -> MemoryPlan:
+    nan = float("nan")
+    expected, peak_dev, peak_host, stall = nan, nan, nan, nan
+    chain_hash = None
+    if chain is not None:
+        res = simulate(chain, schedule)
+        if not res.valid:
+            raise AssertionError(
+                f"planned schedule does not simulate: {res.error}")
+        expected, peak_dev = res.time, res.peak_mem
+        peak_host, stall = res.host_peak_mem, res.transfer_stall
+        chain_hash = chain_fingerprint(chain)
+    return MemoryPlan(request=request, schedule=schedule, tree=tree,
+                      solution=solution, chain=chain, chain_hash=chain_hash,
+                      budget_bytes=budget_bytes, expected_time=expected,
+                      peak_device_mem=peak_dev, peak_host_mem=peak_host,
+                      transfer_stall=stall, policy=policy)
+
+
+def build_plan(request: PlanRequest, chain: Optional[Chain] = None, *,
+               length: Optional[int] = None,
+               auto_budget: Union[float, Callable[[], float], None] = None,
+               policy: Optional[str] = None) -> MemoryPlan:
+    """Resolve a :class:`PlanRequest` into a :class:`MemoryPlan`.
+
+    Structural strategies (``store_all``/``full_remat``/``periodic``) accept
+    a bare ``length`` when no profiled chain is at hand (the plan then has
+    NaN predicted numbers).  Solver strategies need ``chain``; ``auto``
+    budgets additionally need ``auto_budget`` (a float or zero-arg callable
+    supplied by the launch path).  ``policy`` tags the plan with the
+    originating policy string when resolved through the compat shim.
+
+    Raises :class:`InfeasiblePlanError` when no feasible schedule exists and
+    ``request.on_infeasible == "raise"``; with ``"min_memory"`` it falls back
+    to the smallest-memory feasible schedule (reporting its true budget).
+    """
+    num_slots = request.resolved_num_slots
+
+    if request.strategy in STRUCTURAL_STRATEGIES:
+        if chain is not None:
+            length = chain.length
+        if length is None:
+            raise ValueError("need chain or length")
+        tree = _structural_tree(request, length)
+        schedule = tree_to_schedule(tree, length)
+        return _finalize(request, chain, tree, schedule, None, None, policy)
+
+    if chain is None:
+        raise ValueError(f"strategy {request.strategy!r} needs a profiled "
+                         f"chain")
+    entry = solver_for(request.tiers)
+    hchain = _resolve_host(request, chain)
+
+    if request.strategy == "min_memory":
+        sol = entry.solve_min(hchain, num_slots=num_slots,
+                              allow_fall=request.allow_fall,
+                              impl=request.impl)
+        if not sol.feasible:
+            raise InfeasiblePlanError(
+                f"no feasible persistent schedule exists for this chain at "
+                f"any budget (tiers {'+'.join(request.tiers)})")
+        return _finalize(request, hchain, sol.tree, sol.schedule, sol,
+                         sol.mem_limit, policy)
+
+    if request.budget is None:
+        raise ValueError(f"strategy {request.strategy!r} needs a budget")
+    budget = request.budget.resolve(chain, auto_budget=auto_budget)
+    sol = entry.solve(hchain, budget, num_slots=num_slots,
+                      allow_fall=request.allow_fall, impl=request.impl)
+    if not sol.feasible:
+        if request.on_infeasible == "min_memory":
+            fallback = entry.solve_min(hchain, num_slots=num_slots,
+                                       allow_fall=request.allow_fall,
+                                       impl=request.impl)
+            if fallback.feasible:
+                print(f"[plan] budget {budget/2**30:.2f} GiB infeasible; "
+                      f"min-memory schedule needs "
+                      f"{fallback.mem_limit/2**30:.2f} GiB of activations",
+                      flush=True)
+                return _finalize(request, hchain, fallback.tree,
+                                 fallback.schedule, fallback,
+                                 fallback.mem_limit, policy)
+        tiers = "+".join(request.tiers)
+        raise InfeasiblePlanError(
+            f"{request.strategy}: no feasible persistent schedule within "
+            f"{budget:.3e} bytes for this chain (tiers {tiers})")
+    return _finalize(request, hchain, sol.tree, sol.schedule, sol, budget,
+                     policy)
+
+
+def two_tier_fallback(plan: MemoryPlan, chain: Optional[Chain] = None
+                      ) -> MemoryPlan:
+    """Best remat-expressible approximation of an offload-bearing plan: the
+    two-tier optimum at the same device budget, degrading to the min-memory
+    schedule when that budget is two-tier-infeasible.  Used by the jitted
+    launch path, where XLA cannot express host DMA."""
+    if not plan.uses_offload:
+        return plan
+    chain = chain if chain is not None else plan.chain
+    request = dataclasses.replace(
+        plan.request, tiers=("device",), host=None,
+        budget=Budget.bytes(plan.solution.mem_limit),
+        on_infeasible="min_memory")
+    return build_plan(request, chain, policy=plan.policy)
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    """One point of a time-vs-budget frontier: ``plan`` is None when the
+    budget is infeasible for the requested strategy/tiers."""
+    fraction: float
+    budget_bytes: float
+    plan: Optional[MemoryPlan]
+
+    @property
+    def feasible(self) -> bool:
+        return self.plan is not None
+
+
+def sweep(chain: Chain, fractions: Sequence[float],
+          request: Optional[PlanRequest] = None, *,
+          store_all_peak: Optional[float] = None) -> List[SweepPoint]:
+    """The time-vs-budget frontier: build one plan per budget fraction of the
+    store-all peak (infeasible points yield ``plan=None`` instead of
+    raising).  ``request`` is the template — its ``budget`` is replaced per
+    point; defaults to the two-tier optimal strategy.  Thanks to the solver
+    cache, revisiting a frontier is nearly free."""
+    if request is None:
+        request = PlanRequest(strategy="optimal")
+    if store_all_peak is None:
+        store_all_peak = chain.store_all_peak()
+    points: List[SweepPoint] = []
+    for frac in fractions:
+        budget = store_all_peak * frac
+        req = dataclasses.replace(request, budget=Budget.bytes(budget),
+                                  on_infeasible="raise")
+        try:
+            plan = build_plan(req, chain)
+        except InfeasiblePlanError:
+            plan = None
+        points.append(SweepPoint(float(frac), budget, plan))
+    return points
+
+
+def min_memory_plan(chain: Chain, *, tiers: Sequence[str] = ("device",),
+                    num_slots: Optional[int] = None,
+                    impl: Optional[str] = None) -> MemoryPlan:
+    """The smallest-feasible-budget plan for a tier combination (the memory
+    floor; with the host tier it drops below the two-tier floor)."""
+    request = PlanRequest(strategy="min_memory", tiers=tuple(tiers),
+                          num_slots=num_slots, impl=impl)
+    return build_plan(request, chain)

@@ -1,0 +1,110 @@
+"""Policy-string compatibility: the one place the historical string grammar
+(``"rotor:x0.6"``, ``"optimal_offload:8G:12G"``, …) is parsed.
+
+Each documented policy maps onto exactly one typed
+:class:`~repro.plan.PlanRequest` (:func:`policy_to_request` — the migration
+table), and :func:`resolve_policy` is the single resolution path both
+``make_policy_tree`` and ``make_policy_plan`` (in
+:mod:`repro.core.policies`) go through.  No other module in the repo
+dispatches on policy-string prefixes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.chain import Chain, HostTransferModel
+from .api import build_plan
+from .plan import MemoryPlan
+from .request import Budget, PlanRequest, parse_size
+
+#: Every documented policy form (exercised by the back-compat test suite).
+DOCUMENTED_POLICIES = ("none", "full", "periodic:K", "rotor:BUDGET",
+                       "revolve:BUDGET", "optimal_offload:BUDGET[:BW]")
+
+
+def policy_to_request(policy: str, num_slots: Optional[int] = None,
+                      impl: Optional[str] = None) -> PlanRequest:
+    """The translation table: one policy string → one typed request.
+
+    =============================  ==========================================
+    policy string                  PlanRequest equivalent
+    =============================  ==========================================
+    ``none``                       ``strategy="store_all"``
+    ``full``                       ``strategy="full_remat"``
+    ``periodic:K``                 ``strategy="periodic", segments=K``
+    ``rotor:B``                    ``strategy="optimal", budget=parse(B)``
+    ``rotor:auto``                 …, ``budget=Budget.auto(),
+                                   on_infeasible="min_memory"``
+    ``revolve:B``                  ``strategy="revolve", budget=parse(B)``
+    ``optimal_offload:B[:BW]``     ``strategy="optimal",
+                                   tiers=("device","host")``, ``host`` from BW
+                                   (``BW=0`` → ``tiers=("device",)``)
+    =============================  ==========================================
+    """
+    kw = dict(num_slots=num_slots, impl=impl)
+    if policy == "none":
+        return PlanRequest(strategy="store_all", **kw)
+    if policy == "full":
+        return PlanRequest(strategy="full_remat", **kw)
+    if policy.startswith("periodic:"):
+        spec = policy.split(":", 1)[1]
+        try:
+            k = int(spec)
+        except ValueError:
+            raise ValueError(f"periodic policy needs an integer segment "
+                             f"count, got {spec!r}") from None
+        return PlanRequest(strategy="periodic", segments=k, **kw)
+    if policy.startswith(("rotor:", "revolve:")):
+        kind, spec = policy.split(":", 1)
+        budget = Budget.parse(spec)
+        return PlanRequest(
+            strategy="optimal" if kind == "rotor" else "revolve",
+            budget=budget,
+            on_infeasible="min_memory" if budget.kind == "auto" else "raise",
+            **kw)
+    if policy.startswith("optimal_offload"):
+        parts = policy.split(":")
+        if len(parts) < 2:
+            raise ValueError(
+                "optimal_offload policy needs a budget: 'optimal_offload:"
+                "BUDGET[:BW]'")
+        budget = Budget.parse(parts[1])
+        tiers, host = ("device", "host"), None
+        if len(parts) >= 3:
+            bw = parse_size(parts[2])
+            if bw > 0:
+                host = HostTransferModel(bandwidth_d2h=bw)
+            else:
+                # zero host bandwidth: the third tier does not exist
+                tiers = ("device",)
+        return PlanRequest(strategy="optimal", budget=budget, tiers=tiers,
+                           host=host, **kw)
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def resolve_policy(policy: str, chain: Optional[Chain],
+                   length: Optional[int] = None,
+                   num_slots: Optional[int] = None,
+                   impl: Optional[str] = None,
+                   auto_budget=None) -> MemoryPlan:
+    """The single resolution path: policy string → :class:`MemoryPlan`.
+    Both ``make_policy_plan`` and ``make_policy_tree`` go through here —
+    there is no second offload-handling branch to drift."""
+    request = policy_to_request(policy, num_slots=num_slots, impl=impl)
+    if request.strategy in ("optimal", "revolve") and chain is None:
+        raise ValueError(f"{policy!r} needs a profiled chain")
+    return build_plan(request, chain, length=length, auto_budget=auto_budget,
+                      policy=policy)
+
+
+def parse_budget(spec: str, chain: Optional[Chain]) -> float:
+    """Budget in bytes: absolute size, or ``x0.5`` as a fraction of the
+    chain's store-all activation peak."""
+    b = Budget.parse(spec)
+    if b.kind == "auto":
+        raise ValueError(
+            "'auto' budgets resolve only through the launch path (they need "
+            "the per-device HBM and parameter footprint); pass bytes or a "
+            "fraction like 'x0.5'")
+    return b.resolve(chain)

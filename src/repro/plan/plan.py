@@ -1,0 +1,289 @@
+"""The :class:`MemoryPlan` artifact: a solved, inspectable, serializable
+memory plan with a uniform executor binding.
+
+A plan carries the op :class:`~repro.core.schedule.Schedule` (always), the
+recursion tree (always present; remat-expressible iff it contains no offload
+node), the solver :class:`~repro.core.solver.Solution` (for solver-backed
+strategies), and the predicted makespan / device & host peaks from the
+float64 simulator.  It answers the three questions call sites used to answer
+with ad-hoc ``startswith("optimal_offload")`` branching:
+
+- *how do I run this?* — :meth:`MemoryPlan.bind` returns a :class:`BoundPlan`
+  whose ``value_and_grad`` is the jitted nested-remat function when the plan
+  is remat-expressible, and the eager offload executor when it is not
+  (``bound.jittable`` tells you which); :meth:`MemoryPlan.execute` always
+  runs the exact op sequence through the faithful eager executor.
+- *what does it cost?* — :meth:`summary` (human), :meth:`stats` (JSON), and
+  :meth:`timeline` (per-op start/end time + device/host memory).
+- *can I reuse it?* — :meth:`save` / :meth:`load` round-trip the plan through
+  disk; the file embeds the chain's content hash (shared with
+  :mod:`repro.core.solver_cache`), and loading against a different chain
+  raises :class:`StalePlanError`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import sys
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+from ..core.chain import Chain
+from ..core.schedule import Schedule, simulate, uses_offload
+from ..core.solver import Solution
+from ..core.solver_cache import chain_fingerprint
+from .request import PlanRequest
+
+_PLAN_MAGIC = "repro-memory-plan"
+_PLAN_VERSION = 1
+
+
+class StalePlanError(ValueError):
+    """A saved plan was loaded against a chain it was not solved for."""
+
+
+class InfeasiblePlanError(MemoryError):
+    """No feasible schedule exists for the request (budget too small)."""
+
+
+@dataclasses.dataclass
+class MemoryPlan:
+    """A resolved memory plan for one chain.
+
+    ``tree`` is the recursion tree (two-tier :class:`~repro.core.solver.Tree`
+    nodes, plus :class:`~repro.offload.solver.OffNode` for host-tier plans);
+    ``schedule`` is the equivalent flat op sequence.  ``expected_time`` /
+    peaks are float64-simulator numbers (NaN when the plan was built from a
+    bare length with no profiled chain).
+    """
+
+    request: PlanRequest
+    schedule: Schedule
+    tree: Optional[Any]
+    solution: Optional[Solution]
+    chain: Optional[Chain]
+    chain_hash: Optional[str]
+    budget_bytes: Optional[float]
+    expected_time: float
+    peak_device_mem: float
+    peak_host_mem: float
+    transfer_stall: float
+    policy: Optional[str] = None    # originating policy string, via the shim
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def length(self) -> int:
+        return self.schedule.length
+
+    @property
+    def uses_offload(self) -> bool:
+        """True if the schedule needs the host tier (Foff/Prefetch ops)."""
+        return uses_offload(self.schedule)
+
+    @property
+    def remat_expressible(self) -> bool:
+        """True if the plan compiles to nested ``jax.checkpoint`` scopes
+        (host DMA cannot be expressed from a remat tree)."""
+        return self.tree is not None and not self.uses_offload
+
+    def op_counts(self) -> dict:
+        counts: dict = {}
+        for k, _ in self.schedule.ops:
+            counts[k] = counts.get(k, 0) + 1
+        return counts
+
+    def recompute_factor(self) -> float:
+        """Mean number of forward executions per stage (1.0 = no recompute)."""
+        fc = self.schedule.forward_counts()
+        return sum(fc.values()) / max(len(fc), 1)
+
+    def timeline(self) -> List[dict]:
+        """Per-op records ``{"op", "arg", "t_start", "t_end", "device_mem",
+        "host_mem"}`` from the float64 simulator (needs a profiled chain)."""
+        if self.chain is None:
+            raise ValueError("timeline() needs a plan built from a profiled "
+                             "chain, not a bare length")
+        rows: List[dict] = []
+        res = simulate(self.chain, self.schedule, trace=rows)
+        if not res.valid:
+            raise AssertionError(f"plan schedule does not simulate: "
+                                 f"{res.error}")
+        return rows
+
+    def stats(self) -> dict:
+        """JSON-serializable description (recorded by dry-run artifacts)."""
+        return {
+            "strategy": self.request.strategy,
+            "tiers": "+".join(self.request.tiers),
+            "policy": self.policy,
+            "num_slots": self.request.resolved_num_slots,
+            "slots_used": (self.solution.slots_used
+                           if self.solution is not None else None),
+            "budget_bytes": self.budget_bytes,
+            "expected_time_s": self.expected_time,
+            "peak_device_mem": self.peak_device_mem,
+            "peak_host_mem": self.peak_host_mem,
+            "transfer_stall_s": self.transfer_stall,
+            "ops": self.op_counts(),
+            "recompute_factor": self.recompute_factor(),
+            "uses_offload": self.uses_offload,
+            "executor": ("eager-offload" if self.uses_offload
+                         else "jit-nested-remat"),
+            "chain_hash": self.chain_hash,
+        }
+
+    def summary(self) -> str:
+        """Human-readable multi-line description of the plan."""
+        c = self.op_counts()
+        lines = [f"MemoryPlan[{self.request.describe()}]"
+                 + (f" (policy {self.policy!r})" if self.policy else "")]
+        if self.chain is not None:
+            lines.append(f"  chain: L={self.length} stages, "
+                         f"hash {self.chain_hash[:12]}")
+        else:
+            lines.append(f"  chain: L={self.length} stages (no profile)")
+        if self.budget_bytes is not None:
+            used = (f", {self.solution.slots_used}/"
+                    f"{self.request.resolved_num_slots} slots used"
+                    if self.solution is not None else "")
+            lines.append(f"  budget: {self.budget_bytes:.3e} B{used}")
+        if self.expected_time == self.expected_time:  # not NaN
+            lines.append(f"  predicted: {self.expected_time:.4f} s/iter, "
+                         f"device peak {self.peak_device_mem:.3e} B, "
+                         f"host peak {self.peak_host_mem:.3e} B, "
+                         f"transfer stall {self.transfer_stall:.4f} s")
+        ops = " ".join(f"{k}:{c[k]}" for k in
+                       ("Fall", "Fck", "Fnone", "B", "Foff", "Prefetch")
+                       if k in c)
+        lines.append(f"  ops: {len(self.schedule)} ({ops}), "
+                     f"recompute x{self.recompute_factor():.2f}")
+        lines.append(f"  executor: "
+                     f"{'eager offload (host DMA)' if self.uses_offload else 'jitted nested remat'}")
+        return "\n".join(lines)
+
+    # -- execution ---------------------------------------------------------
+
+    def bind(self, stages: Sequence[Callable],
+             checkpoint_policy=None) -> "BoundPlan":
+        """Bind per-stage callables to this plan: the uniform executor
+        dispatch.  ``stages[l-1]`` is paper-stage ``l``; the result's
+        ``value_and_grad`` runs the jitted remat tree when the plan is
+        remat-expressible and the eager offload executor otherwise."""
+        return BoundPlan(self, list(stages), checkpoint_policy)
+
+    def execute(self, stages: Sequence[Callable], params: Sequence[Any],
+                x: Any, **kwargs) -> Tuple[Any, List[Any], Any]:
+        """Run the exact op sequence through the faithful eager executor
+        (host copies included); returns ``(out, param_grads, input_grad)``."""
+        from ..core.executor import execute_schedule
+        return execute_schedule(self.schedule, stages, params, x, **kwargs)
+
+    # -- persistence -------------------------------------------------------
+
+    def validate_chain(self, chain: Chain) -> None:
+        """Raise :class:`StalePlanError` unless ``chain`` is content-identical
+        to the chain this plan was solved for."""
+        got = chain_fingerprint(chain)
+        if self.chain_hash is None:
+            raise StalePlanError(
+                "plan carries no chain hash (built from a bare length); "
+                "cannot validate it against a profiled chain")
+        if got != self.chain_hash:
+            raise StalePlanError(
+                f"plan was solved for chain {self.chain_hash[:12]}… but the "
+                f"given chain hashes to {got[:12]}… — re-plan (costs, sizes "
+                f"or the host link changed)")
+
+    def save(self, path: str) -> None:
+        """Serialize the plan (header + pickle).  The header embeds the chain
+        content hash so :meth:`load` can refuse a mismatched chain."""
+        payload = (_PLAN_MAGIC, _PLAN_VERSION, self.chain_hash, self)
+        limit = sys.getrecursionlimit()
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            # recursion trees nest O(L) deep; pickle recurses through them
+            sys.setrecursionlimit(max(limit, 100_000))
+            with open(tmp, "wb") as f:
+                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)
+        finally:
+            sys.setrecursionlimit(limit)
+            if os.path.exists(tmp):
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    @staticmethod
+    def load(path: str, chain: Optional[Chain] = None) -> "MemoryPlan":
+        """Load a saved plan.  With ``chain`` given, the plan is validated
+        against it (:class:`StalePlanError` on mismatch) — always pass the
+        chain you are about to execute on."""
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        try:
+            magic, version, chain_hash, plan = payload
+        except (TypeError, ValueError):
+            raise ValueError(f"{path!r} is not a saved MemoryPlan")
+        if magic != _PLAN_MAGIC:
+            raise ValueError(f"{path!r} is not a saved MemoryPlan")
+        if version != _PLAN_VERSION:
+            raise ValueError(f"saved plan {path!r} has version {version}, "
+                             f"this build reads {_PLAN_VERSION}")
+        if not isinstance(plan, MemoryPlan):
+            raise ValueError(f"{path!r} does not contain a MemoryPlan")
+        if chain is not None:
+            plan.validate_chain(chain)
+        return plan
+
+
+class BoundPlan:
+    """A plan bound to concrete stage callables — one call surface for both
+    execution backends.
+
+    - ``jittable`` — True when the plan compiles to nested ``jax.checkpoint``
+      scopes; ``forward``/``value_and_grad`` are then pure jit-able functions.
+    - ``forward(params, x)`` — the chain's forward value.
+    - ``value_and_grad(params, x)`` — ``(out, param_grads, input_grad)``;
+      the remat path differentiates the composed function, the offload path
+      runs the op-faithful eager executor (``jax.device_put`` copies and all).
+    """
+
+    def __init__(self, plan: MemoryPlan, stages: Sequence[Callable],
+                 checkpoint_policy=None):
+        self.plan = plan
+        self.stages = list(stages)
+        self.jittable = plan.remat_expressible
+        if self.jittable:
+            from ..core.rematerialize import build_remat_fn
+            self._fn = build_remat_fn(plan.tree, self.stages,
+                                      checkpoint_policy=checkpoint_policy)
+        else:
+            self._fn = None
+
+    def forward(self, params: Sequence[Any], x: Any) -> Any:
+        if self.jittable:
+            return self._fn(params, x)
+        out, _, _ = self._run_eager(params, x)
+        return out
+
+    def value_and_grad(self, params: Sequence[Any], x: Any
+                       ) -> Tuple[Any, List[Any], Any]:
+        if self.jittable:
+            import jax
+            out, (gp, gx) = jax.value_and_grad(
+                self._fn, argnums=(0, 1))(params, x)
+            return out, list(gp), gx
+        return self._run_eager(params, x)
+
+    def _run_eager(self, params, x):
+        from ..offload.executor import execute_offload_schedule
+        from ..offload.host_buffer import HostBuffer
+        return execute_offload_schedule(self.plan.schedule, self.stages,
+                                        params, x, host_buffer=HostBuffer())
+
+    def __repr__(self):
+        mode = "jit-remat" if self.jittable else "eager-offload"
+        return f"BoundPlan({mode}, L={self.plan.length})"

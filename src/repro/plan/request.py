@@ -1,0 +1,220 @@
+"""Typed planning requests: what a caller wants from the memory planner.
+
+This module is the replacement for the stringly-typed policy surface: instead
+of ``"rotor:x0.6"`` parsed by regex at every call site, callers build a
+:class:`PlanRequest` — a budget (bytes, fraction of the store-all peak, or
+``auto``), the storage tiers to plan over, an optional host-link override,
+the slot discretization, and the DP kernel implementation — and hand it to
+:func:`repro.plan.build_plan`.  The old policy strings still work through the
+:mod:`repro.core.policies` shim, which maps each string onto exactly one
+``PlanRequest`` (see :func:`repro.core.policies.policy_to_request`).
+
+Size / budget grammar (shared by the shim):
+
+- ``"1.5G"``, ``"800M"``, ``"2e9"``, ``"123"``, ``"0"`` — absolute sizes,
+  with optional K/M/G/T decimal suffix (:func:`parse_size`);
+- ``"x0.5"`` — a fraction of the chain's store-all activation peak;
+- ``"auto"`` — derive the budget from launch context (HBM minus sharded
+  parameter/optimizer state; only resolvable where that context exists).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Tuple, Union
+
+from ..core.chain import Chain, HostTransferModel
+
+#: Default slot count for the DP discretization (paper §5.2: the makespan
+#: overestimation is at most a ``1 + 1/S`` factor).  Every entry point that
+#: accepts ``num_slots=None`` resolves it here — one place to configure.
+DEFAULT_NUM_SLOTS = 500
+
+_UNITS = {"K": 1e3, "M": 1e6, "G": 1e9, "T": 1e12}
+
+# a strict decimal-or-scientific literal: "1", "1.5", ".5", "2e9", "1.5E-3"
+_NUMBER = r"(?:[0-9]+(?:\.[0-9]*)?|\.[0-9]+)(?:[eE][+-]?[0-9]+)?"
+_SIZE_RE = re.compile(rf"({_NUMBER})\s*([KMGT]?)")
+_FRACTION_RE = re.compile(rf"x({_NUMBER})")
+
+
+def parse_size(spec: str) -> float:
+    """Parse an absolute size: a non-negative number with an optional K/M/G/T
+    suffix (``"1.5G"`` → 1.5e9).  Rejects anything else — including the
+    garbage the old ``[\\d.eE+-]+`` regex let through (``"1e"``, ``"--5G"``,
+    ``"1..5"``) — with a message naming the accepted forms."""
+    m = _SIZE_RE.fullmatch(spec.strip())
+    if not m:
+        raise ValueError(
+            f"cannot parse size {spec!r}: expected a number with an optional "
+            f"K/M/G/T suffix, e.g. '1.5G', '800M', '2e9', '123'")
+    return float(m.group(1)) * _UNITS.get(m.group(2), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """A memory budget: absolute bytes, a fraction of the store-all peak, or
+    ``auto`` (derived from launch context by the caller)."""
+
+    kind: str           # "bytes" | "fraction" | "auto"
+    value: float = 0.0
+
+    _KINDS = ("bytes", "fraction", "auto")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown budget kind {self.kind!r}; "
+                             f"expected one of {self._KINDS}")
+        if self.kind != "auto" and (self.value < 0 or self.value != self.value):
+            raise ValueError(f"budget value must be non-negative, "
+                             f"got {self.value!r}")
+
+    # -- constructors ------------------------------------------------------
+
+    @staticmethod
+    def bytes(n: float) -> "Budget":
+        return Budget("bytes", float(n))
+
+    @staticmethod
+    def fraction(f: float) -> "Budget":
+        """Fraction of the chain's store-all activation peak."""
+        return Budget("fraction", float(f))
+
+    @staticmethod
+    def auto() -> "Budget":
+        """Budget derived from launch context (HBM − sharded param/opt
+        states); resolvable only where the caller supplies that context."""
+        return Budget("auto")
+
+    @staticmethod
+    def parse(spec: str) -> "Budget":
+        """Parse the documented budget grammar: ``1.5G`` / ``800M`` / ``2e9``
+        / ``123`` / ``0`` (bytes), ``x0.5`` (fraction), ``auto``."""
+        spec = spec.strip()
+        if spec == "auto":
+            return Budget.auto()
+        if spec.startswith("x"):
+            m = _FRACTION_RE.fullmatch(spec)
+            if not m:
+                raise ValueError(
+                    f"cannot parse fractional budget {spec!r}: expected "
+                    f"'x' followed by a number, e.g. 'x0.5'")
+            return Budget.fraction(float(m.group(1)))
+        return Budget.bytes(parse_size(spec))
+
+    # -- resolution --------------------------------------------------------
+
+    def resolve(self, chain: Optional[Chain] = None, *,
+                store_all_peak: Optional[float] = None,
+                auto_budget: Union[float, Callable[[], float], None] = None,
+                ) -> float:
+        """The budget in bytes.  Fractions need ``chain`` (or an explicit
+        ``store_all_peak``); ``auto`` needs ``auto_budget`` — a float or a
+        zero-arg callable supplied by the launch path."""
+        if self.kind == "bytes":
+            return self.value
+        if self.kind == "fraction":
+            if store_all_peak is None:
+                if chain is None:
+                    raise ValueError("fractional budget needs a profiled chain")
+                store_all_peak = chain.store_all_peak()
+            return self.value * store_all_peak
+        if auto_budget is None:
+            raise ValueError(
+                "auto budget needs launch context (per-device HBM and the "
+                "sharded parameter/optimizer footprint) — pass auto_budget=, "
+                "or use an explicit bytes/fraction budget")
+        return float(auto_budget() if callable(auto_budget) else auto_budget)
+
+    def describe(self) -> str:
+        if self.kind == "bytes":
+            return f"{self.value:.3e} B"
+        if self.kind == "fraction":
+            return f"x{self.value:g} of store-all peak"
+        return "auto"
+
+
+#: Strategies backed by a DP solve (need a chain; ``optimal``/``revolve``
+#: also need a budget).
+SOLVER_STRATEGIES = ("optimal", "revolve", "min_memory")
+#: Strategies that are pure schedule structure (no solve; a bare ``length``
+#: suffices when no profiled chain is at hand).
+STRUCTURAL_STRATEGIES = ("store_all", "full_remat", "periodic")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """A typed memory-planning request — the single argument of
+    :func:`repro.plan.build_plan`.
+
+    Fields:
+
+    - ``strategy`` — ``"optimal"`` (the paper's DP), ``"revolve"`` (the
+      AD-model comparator: ``F_all``-first branch disabled), ``"min_memory"``
+      (smallest feasible budget; ignores ``budget``), or the structural
+      baselines ``"store_all"`` / ``"full_remat"`` / ``"periodic"``.
+    - ``budget`` — a :class:`Budget`; required for ``optimal``/``revolve``.
+    - ``segments`` — segment count for ``periodic``.
+    - ``tiers`` — storage tiers to plan over: ``("device",)`` is the paper's
+      two-tier model, ``("device", "host")`` adds asynchronous host-RAM
+      offload.  The tier combo selects the solver through
+      :mod:`repro.plan.registry`.
+    - ``host`` — optional :class:`HostTransferModel` override; when the host
+      tier is requested and this is ``None``, the chain's profiled link is
+      used, falling back to the PCIe-3 x16 constant.
+    - ``num_slots`` — DP discretization (``None`` → :data:`DEFAULT_NUM_SLOTS`).
+    - ``impl`` — DP kernel implementation (``"banded"``/``"reference"``;
+      ``None`` → the solver default / ``REPRO_DP_IMPL``).
+    - ``on_infeasible`` — ``"raise"`` (default: :class:`repro.plan
+      .InfeasiblePlanError`) or ``"min_memory"`` (fall back to the
+      smallest-memory feasible schedule and report its true need).
+    """
+
+    strategy: str = "optimal"
+    budget: Optional[Budget] = None
+    segments: int = 0
+    tiers: Tuple[str, ...] = ("device",)
+    host: Optional[HostTransferModel] = None
+    num_slots: Optional[int] = None
+    impl: Optional[str] = None
+    on_infeasible: str = "raise"
+
+    def __post_init__(self):
+        known = SOLVER_STRATEGIES + STRUCTURAL_STRATEGIES
+        if self.strategy not in known:
+            raise ValueError(f"unknown plan strategy {self.strategy!r}; "
+                             f"expected one of {known}")
+        if self.strategy == "periodic" and self.segments < 1:
+            raise ValueError("periodic strategy needs segments >= 1")
+        if isinstance(self.tiers, list):
+            object.__setattr__(self, "tiers", tuple(self.tiers))
+        if not self.tiers or self.tiers[0] != "device":
+            raise ValueError(f"tiers must start with 'device', "
+                             f"got {self.tiers!r}")
+        if self.on_infeasible not in ("raise", "min_memory"):
+            raise ValueError(
+                f"on_infeasible must be 'raise' or 'min_memory', "
+                f"got {self.on_infeasible!r}")
+        if self.num_slots is not None and self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+
+    @property
+    def resolved_num_slots(self) -> int:
+        return DEFAULT_NUM_SLOTS if self.num_slots is None else self.num_slots
+
+    @property
+    def allow_fall(self) -> bool:
+        """The DP's ``F_all``-first branch is what `revolve` disables."""
+        return self.strategy != "revolve"
+
+    def describe(self) -> str:
+        bits = [self.strategy, "+".join(self.tiers)]
+        if self.budget is not None and self.strategy in ("optimal", "revolve"):
+            bits.append(self.budget.describe())
+        if self.strategy == "periodic":
+            bits.append(f"k={self.segments}")
+        bits.append(f"slots={self.resolved_num_slots}")
+        if self.impl:
+            bits.append(f"impl={self.impl}")
+        return " ".join(bits)

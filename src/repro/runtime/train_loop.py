@@ -23,7 +23,7 @@ from ..data.pipeline import SyntheticLMData
 from ..distributed.fault_tolerance import StragglerWatchdog
 from ..distributed.sharding import DEFAULT_RULES, axis_rules, spec_for
 from ..launch.steps import (batch_axes, make_train_step, opt_axes,
-                            plan_rotor_tree, shard_tree, sharding_of)
+                            plan_training, shard_tree, sharding_of)
 from ..models.lm import StagedLM
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from ..optim.schedules import linear_warmup_cosine
@@ -70,6 +70,8 @@ class TrainLoopConfig:
     async_ckpt: bool = True
     log_every: int = 10
     policy: Optional[str] = None        # remat policy override
+    num_slots: Optional[int] = None     # DP discretization (None = plan default)
+    solver_impl: Optional[str] = None   # DP kernels ("banded"/"reference")
     grad_accum: int = 1                 # microbatch accumulation factor
     straggler_threshold: float = 3.0
     data_host_count: int = 1
@@ -90,36 +92,31 @@ def run_training(cfg, loop: TrainLoopConfig, mesh=None,
     shape = ShapeSpec("train", "train", loop.seq_len, loop.global_batch)
     with axis_rules(mesh, rules):
         batch_specs = input_specs(cfg, shape)
-        offload_plan = None
-        if loop.policy and loop.policy.startswith("optimal_offload"):
-            from ..core.policies import make_policy_plan
-            from ..launch.steps import plan_chain
-
-            plan = make_policy_plan(
-                loop.policy, plan_chain(model, batch_specs, mesh, rules))
-            if plan.uses_offload:
-                if loop.grad_accum != 1:
-                    raise NotImplementedError(
-                        "grad_accum > 1 with an offload schedule")
-                if mesh.size > 1:
-                    # the eager executor commits prefetched activations to a
-                    # single device; mesh-sharded params/batch would mix
-                    # incompatible placements
-                    raise NotImplementedError(
-                        "the optimal_offload eager path runs on a single "
-                        "device; use a two-tier policy (rotor:...) on "
-                        "multi-device meshes")
-                offload_plan = plan
-                tree, chain = None, plan.chain
-                log_fn(f"[offload] three-tier plan: "
-                       f"{plan.schedule.count('Foff')} host offloads, "
-                       f"predicted {plan.solution.expected_time:.4f}s model "
-                       f"time/step — eager executor engaged")
-            else:
-                tree, chain = plan.tree, plan.chain
-        else:
-            tree, chain = plan_rotor_tree(model, batch_specs, mesh, rules,
-                                          loop.policy)
+        # one planning entry point for every policy — the plan itself says
+        # which executor it needs (no policy-string dispatch here)
+        plan, chain = plan_training(model, batch_specs, mesh, rules,
+                                    loop.policy, num_slots=loop.num_slots,
+                                    impl=loop.solver_impl)
+        offload_plan, tree = None, None
+        if plan is not None and plan.uses_offload:
+            if loop.grad_accum != 1:
+                raise NotImplementedError(
+                    "grad_accum > 1 with an offload schedule")
+            if mesh.size > 1:
+                # the eager executor commits prefetched activations to a
+                # single device; mesh-sharded params/batch would mix
+                # incompatible placements
+                raise NotImplementedError(
+                    "the optimal_offload eager path runs on a single "
+                    "device; use a two-tier policy (rotor:...) on "
+                    "multi-device meshes")
+            offload_plan = plan
+            log_fn(f"[offload] three-tier plan: "
+                   f"{plan.schedule.count('Foff')} host offloads, "
+                   f"predicted {plan.expected_time:.4f}s model "
+                   f"time/step — eager executor engaged")
+        elif plan is not None:
+            tree = plan.tree
         if tree is not None:
             log_fn(f"[rotor] plan: {count_checkpoint_scopes(tree)} checkpoint "
                    f"scopes over {model.n_stages()} stages")
