@@ -1,13 +1,19 @@
 """Paper §5.2: DP solver runtime vs chain length (their C implementation:
 <1 s typical, ~20 s at L=339 / S=500).
 
-Times three solvers per chain length:
+Times the solver impls per chain length:
 
-- **banded**    — the default two-tier DP on the split-batched float32 band
-  kernels (``repro.core.dp_kernels``),
-- **reference** — the retained seed per-cell float64 fill (the PR's "current
-  ``_fill_tables`` path" comparator; the ≥10× claim is measured against it),
-- **offload**   — the three-tier DP (same kernels, one extra candidate
+- **banded**         — the default two-tier DP on the split-batched float32
+  band kernels (``repro.core.dp_kernels``), saturated m-columns pruned,
+- **banded-noprune** — the same fill with ``REPRO_DP_PRUNE=0`` (the pruning
+  delta is recorded as ``pruning_speedup`` on this row),
+- **pallas**         — the Pallas band-fill kernel (``repro.kernels.dp_fill``)
+  behind ``impl="pallas"``; on this CPU host it runs in interpret mode (the
+  TPU dispatch seam's fallback), so it is timed only up to
+  ``pallas_max_len`` — the row records the *seam*, not TPU speed,
+- **reference**      — the retained seed per-cell float64 fill (the ≥10×
+  claim is measured against it),
+- **offload**        — the three-tier DP (same kernels, one extra candidate
   plane) on the same chain priced with a host link.
 
 Also reports ``Solution.table_bytes`` per impl (the banded layout must be
@@ -16,13 +22,15 @@ by the solver cache without any table fill.
 
 ``run()`` returns a machine-readable dict; ``benchmarks/run.py`` (and this
 module's CLI) dump it to ``BENCH_solver.json`` so the perf trajectory is
-tracked across PRs.
+tracked across PRs (``benchmarks/compare_trajectory.py`` gates CI on it).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import os
 import time
 
 import numpy as np
@@ -33,6 +41,24 @@ from repro.core.solver import solve_optimal
 from repro.offload.solver import solve_optimal_offload
 
 JSON_PATH = "BENCH_solver.json"
+
+#: Interpret-mode Pallas executes kernel bodies in Python — fine for parity,
+#: hopeless for timing big chains on CPU.  Lengths above this are skipped
+#: (and logged) unless a TPU backend is present.
+PALLAS_MAX_LEN = 50
+
+
+@contextlib.contextmanager
+def _pruning_disabled():
+    old = os.environ.get("REPRO_DP_PRUNE")
+    os.environ["REPRO_DP_PRUNE"] = "0"
+    try:
+        yield
+    finally:
+        if old is None:
+            del os.environ["REPRO_DP_PRUNE"]
+        else:
+            os.environ["REPRO_DP_PRUNE"] = old
 
 
 def _chain(L: int, rng) -> Chain:
@@ -53,7 +79,8 @@ def _best_of(fn, repeats: int):
 
 
 def run(lengths=(20, 50, 100, 200, 339), num_slots=500, emit=print,
-        reference=True, offload=True, repeats=2):
+        reference=True, offload=True, repeats=2, pallas=True,
+        pallas_max_len=PALLAS_MAX_LEN, prune_rows=True):
     emit("L,num_slots,impl,solve_s,feasible,expected_time,table_bytes")
     rng = np.random.default_rng(0)
     rows = []
@@ -76,6 +103,29 @@ def run(lengths=(20, 50, 100, 200, 339), num_slots=500, emit=print,
             lambda: solve_optimal(ch, budget, num_slots=num_slots,
                                   cache=False), repeats)
         row(L, "banded", dt_b, sol_b)
+        if prune_rows:
+            with _pruning_disabled():
+                dt_np, sol_np = _best_of(
+                    lambda: solve_optimal(ch, budget, num_slots=num_slots,
+                                          cache=False), repeats)
+            r = row(L, "banded-noprune", dt_np, sol_np)
+            r["pruning_speedup"] = round(dt_np / max(dt_b, 1e-9), 2)
+            assert sol_np.feasible == sol_b.feasible
+            if sol_b.feasible:
+                assert sol_np.expected_time == sol_b.expected_time
+        if pallas:
+            if L <= pallas_max_len:
+                dt_p, sol_p = _best_of(
+                    lambda: solve_optimal(ch, budget, num_slots=num_slots,
+                                          impl="pallas", cache=False), 1)
+                r = row(L, "pallas", dt_p, sol_p)
+                r["ratio_vs_banded"] = round(dt_p / max(dt_b, 1e-9), 2)
+                assert sol_p.feasible == sol_b.feasible
+                if sol_b.feasible:
+                    assert sol_p.expected_time == sol_b.expected_time
+            else:
+                emit(f"# pallas: skipped at L={L} (interpret-mode CPU "
+                     f"fallback; rows capped at L<={pallas_max_len})")
         if reference:
             dt_r, sol_r = _best_of(
                 lambda: solve_optimal(ch, budget, num_slots=num_slots,
@@ -132,8 +182,15 @@ def write_json(result: dict, path: str = JSON_PATH) -> None:
 
 
 def main(emit=print, small: bool = True):
-    lengths = (20, 50, 100) if small else (20, 50, 100, 200, 339)
-    return run(lengths=lengths, num_slots=200 if small else 500, emit=emit)
+    if small:
+        return run(lengths=(20, 50, 100), num_slots=200, emit=emit)
+    result = run(emit=emit)
+    # Embed the CI-sized run too: the bench-trajectory job replays exactly
+    # `--small` on the runner and diffs its rows against this section of the
+    # committed baseline (same lengths, same slot count — comparable rows).
+    emit("# small (CI bench-trajectory baseline) rows:")
+    result["small"] = run(lengths=(20, 50, 100), num_slots=200, emit=emit)
+    return result
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Gate a fresh ``bench_solver`` run against the committed baseline.
+
+The ``bench-trajectory`` CI job runs ``python -m benchmarks.bench_solver
+--small --json <current>`` on the runner, uploads the JSON as an artifact
+(the perf trajectory), and then calls this script to diff the run's
+wall-times against the committed ``BENCH_solver.json``.  Rows are matched on
+``(L, num_slots, impl)``; the baseline's ``"small"`` section is preferred
+when present (it was recorded at the CI sizes, so the rows are comparable).
+
+The committed baseline is recorded on a developer machine, while CI runs on
+a shared runner that may simply be slower, so raw ratios would flag phantom
+regressions.  The gate therefore *calibrates*: the smallest above-floor
+ratio across matched rows estimates the machine-speed delta (a real
+regression inflates the rows of the impl it touches, not every impl at
+once; a slower machine shifts all of them), clamped to [1, 4] so a uniform
+blow-up cannot hide entirely — and the tier1 job's absolute hard-timeout
+smoke still bounds the worst case.  A row breaches when
+``current > threshold * machine_factor * baseline`` (threshold default
+x1.5) *and* the current time is above the noise floor — sub-50 ms solves
+are timer noise on shared runners and are reported but never fail.
+Unmatched current rows are reported as "new" (that is how first baselines
+enter the trajectory) and do not fail.
+
+Stdlib-only on purpose: the gate must run before any heavy dependency is
+importable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: Solves faster than this are dominated by timer noise on shared CI
+#: runners; they are printed but never breach the gate.
+NOISE_FLOOR_S = 0.05
+
+#: Rows must be at least this slow (in the *current* run) to vote on the
+#: machine-speed factor — faster rows are too noisy to calibrate on.
+CALIBRATE_FLOOR_S = 0.02
+
+#: Machine-speed factor clamp: never "explain away" more than a 4x uniform
+#: slowdown, and never scale the baseline down (a faster runner must not
+#: loosen the gate).
+MAX_MACHINE_FACTOR = 4.0
+
+_COLS = f"{'L':>5} {'slots':>6} {'impl':<16} {'base_s':>9} {'cur_s':>9}"
+HEADER = f"{_COLS} {'ratio':>7}  verdict"
+
+
+def _rows(doc: dict, prefer_small: bool) -> list:
+    if prefer_small and "small" in doc:
+        return doc["small"]["rows"]
+    return doc["rows"]
+
+
+def _key(row: dict) -> tuple:
+    return (row["L"], row["num_slots"], row["impl"])
+
+
+def _matched(baseline: dict, current: dict) -> list:
+    base = {_key(r): r for r in _rows(baseline, prefer_small=True)}
+    out = []
+    for row in _rows(current, prefer_small=False):
+        out.append((row, base.get(_key(row))))
+    return out
+
+
+def machine_factor(pairs: list) -> float:
+    """The least-regressed above-floor ratio, clamped to [1, MAX]."""
+    ratios = []
+    for row, b in pairs:
+        if b is None or b["solve_s"] <= 0:
+            continue
+        if row["solve_s"] >= CALIBRATE_FLOOR_S:
+            ratios.append(row["solve_s"] / b["solve_s"])
+    if not ratios:
+        return 1.0
+    return min(MAX_MACHINE_FACTOR, max(1.0, min(ratios)))
+
+
+def compare(baseline: dict, current: dict, threshold: float,
+            calibrate: bool = True) -> int:
+    pairs = _matched(baseline, current)
+    factor = machine_factor(pairs) if calibrate else 1.0
+    limit = threshold * factor
+    print(f"machine-speed factor: x{factor:.2f} "
+          f"(effective threshold x{limit:.2f})")
+    breaches = 0
+    print(HEADER)
+    print("-" * len(HEADER))
+    for row, b in pairs:
+        k = _key(row)
+        cur_s = row["solve_s"]
+        prefix = f"{k[0]:>5} {k[1]:>6} {k[2]:<16}"
+        if b is None:
+            line = f"{prefix} {'-':>9} {cur_s:>9.3f} {'-':>7}  new (no baseline)"
+            print(line)
+            continue
+        base_s = b["solve_s"]
+        ratio = cur_s / base_s if base_s > 0 else float("inf")
+        if cur_s <= NOISE_FLOOR_S:
+            verdict = "ok (noise floor)"
+        elif ratio > limit:
+            verdict = f"REGRESSION (> x{limit:.2f})"
+            breaches += 1
+        else:
+            verdict = "ok"
+        print(f"{prefix} {base_s:>9.3f} {cur_s:>9.3f} {ratio:>7.2f}  {verdict}")
+    return breaches
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_solver.json")
+    ap.add_argument("--current", required=True)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.5,
+        help="fail when current > threshold * machine_factor * baseline",
+    )
+    ap.add_argument(
+        "--no-calibrate",
+        action="store_true",
+        help="compare raw wall-times (baseline and current on the same host)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    breaches = compare(
+        baseline, current, args.threshold, calibrate=not args.no_calibrate
+    )
+    if breaches:
+        print(f"{breaches} row(s) regressed beyond x{args.threshold:g} baseline")
+        return 1
+    print("bench trajectory within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,6 @@ paper-scale variants (L=339 solver, 12-block chains)."""
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -14,8 +14,20 @@ from .rematerialize import (build_remat_fn, count_checkpoint_scopes,
 from .executor import execute_schedule, reference_grads
 from .planner import (measure_host_bandwidth, profile_stages_analytic,
                       profile_stages_measured, residual_bytes)
-from .policies import (PolicyPlan, make_policy_plan, make_policy_tree,
-                       parse_budget, policy_to_request, resolve_policy)
+# The policy-shim re-exports are lazy (PEP 562): policies.py imports
+# repro.plan, which imports straight back into repro.core — importing it
+# eagerly here made `import repro.plan` crash with a circular-import error
+# whenever it was the process's *first* repro import (exactly the README
+# quickstart).  Every name still resolves via __getattr__ below.
+_POLICY_EXPORTS = ("PolicyPlan", "make_policy_plan", "make_policy_tree",
+                   "parse_budget", "policy_to_request", "resolve_policy")
+
+
+def __getattr__(name):
+    if name in _POLICY_EXPORTS:
+        from . import policies
+        return getattr(policies, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Chain", "DiscreteChain", "HostTransferModel", "Schedule", "SimResult",

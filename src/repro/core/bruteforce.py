@@ -17,7 +17,7 @@ import itertools
 from typing import Dict, FrozenSet, Optional, Tuple
 
 from .chain import Chain
-from .schedule import BWD, F_ALL, F_CK, F_NONE, FREE, Schedule, simulate
+from .schedule import BWD, F_ALL, F_CK, F_NONE, FREE, Schedule
 
 Item = Tuple[str, int]
 State = Tuple[FrozenSet[Item], int, bool]  # (live a/abar items, next_bwd, persistent)

@@ -37,6 +37,24 @@ in float32 below 2^24, so the banded DP is bit-equal to the float64 reference
 there; ``solve_optimal`` recomputes ``expected_time`` of the reconstructed
 schedule in float64 via the simulator, so the published makespan is exact
 regardless of the table dtype.
+
+The fills all share a *saturated m-column pruning* pass
+(:func:`saturation_caps`): ``C[s, t, m]`` is constant in ``m`` beyond a
+per-band frontier (once every threshold is passed and every child read lands
+in the child's own constant region, more memory cannot change any candidate),
+and the frontier is computable from the thresholds and shift widths alone —
+before any fill runs.  Each band is therefore filled only up to its frontier
+column and the last computed column is broadcast across the rest; the result
+is bit-identical to the unpruned fill (tested), but small-length bands — the
+ones with the most rows — shrink to a few dozen columns.  ``REPRO_DP_PRUNE=0``
+disables pruning globally (every fill also takes an explicit ``prune=``).
+
+Three implementations share this recursion end to end (``KNOWN_IMPLS``):
+``"banded"`` (this module's numpy kernels), ``"reference"`` (the seed
+per-cell float64 fill in the solvers), and ``"pallas"`` (the Pallas band-fill
+kernel package :mod:`repro.kernels.dp_fill`, dispatched lazily by
+:func:`fill_tables` / :func:`fill_tables_offload` so the numpy core never
+imports jax).
 """
 
 from __future__ import annotations
@@ -52,6 +70,18 @@ INFEASIBLE = np.inf
 COST_DTYPE = np.float32
 _F32 = np.float32
 _INF32 = np.float32(np.inf)
+
+#: The DP fill implementations every solver entry point accepts.
+KNOWN_IMPLS = ("banded", "reference", "pallas")
+
+
+def _resolve_prune(prune: Optional[bool]) -> bool:
+    """Saturated m-column pruning default: on, unless ``REPRO_DP_PRUNE``
+    says otherwise (``0``/``false``/``off``)."""
+    if prune is not None:
+        return bool(prune)
+    return os.environ.get("REPRO_DP_PRUNE", "1").lower() not in (
+        "0", "false", "off")
 
 # The split loop parallelizes exactly (each split's candidate plane is
 # independent; min-accumulation is order-free — IEEE min does not round), so
@@ -138,6 +168,86 @@ def _m_none(v: dict, s: int, t: int) -> int:
         best = max(best, (v["WD"][t] + v["WA"][js - 1] + v["WA"][js]
                           + v["OF"][js]).max())
     return int(best)
+
+
+def _h_vector(v: dict) -> np.ndarray:
+    """H[j] = WA[j-1] + WA[j] + OF[j] (the F_∅-stream liveness of a^{j-1},
+    a^j plus the forward overhead), j = 1..L — windows of it give m_∅."""
+    L = v["L"]
+    WA = np.asarray(v["WA"], dtype=np.int64)
+    H = np.zeros(L + 1, dtype=np.int64)
+    if L >= 1:
+        H[1:] = WA[:-1] + WA[1:] + np.asarray(v["OF"][1:L + 1], dtype=np.int64)
+    return H
+
+
+def _band_thresholds(v: dict, H: np.ndarray, d: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """(m_all, m_none) for every start ``s = 1..L+1-d`` at length ``d``."""
+    L = v["L"]
+    ns = L + 1 - d
+    sv = np.arange(1, ns + 1)
+    tv = sv + d
+    WD, OF, OB = v["WD"], v["OF"], v["OB"]
+    WA = np.asarray(v["WA"], dtype=np.int64)
+    WB = np.asarray(v["WABAR"], dtype=np.int64)
+    ma = np.maximum(WD[tv] + WB[sv] + OF[sv].astype(np.int64),
+                    WD[sv] + WB[sv] + OB[sv].astype(np.int64))
+    base = WA[sv] + OF[sv].astype(np.int64)
+    if d >= 2:
+        wmax = sliding_window_view(H[2:L + 1], d - 1)[:ns].max(axis=1)
+        mn = WD[tv] + np.maximum(base, wmax)
+    else:
+        mn = WD[tv] + base
+    return ma, mn
+
+
+def saturation_caps(v: dict, S: int, allow_fall: bool = True) -> np.ndarray:
+    """Per-band saturated-column frontier, computable *before any fill runs*.
+
+    ``caps[d]`` is a column index ``c <= S`` such that every cell of band
+    ``d`` is constant in ``m`` on ``[c, S]``.  Induction: a base-case cell is
+    ``+inf`` below its ``m_all`` threshold and constant above it; a band-``d``
+    cell at ``m >= caps[d]`` has every threshold passed (``caps[d]`` majorizes
+    the band's ``m_∅``/``m_all``) and every candidate read lands at column
+    ``m - w >= caps[d-1]`` (``caps[d] >= caps[d-1] + wshift`` with ``wshift``
+    the largest in-table memory shift) — i.e. in the child's own constant
+    region — so no candidate, and hence no min, can change with ``m``.  The
+    offload C3 memory-*gain* reads land at columns ``> m``, which the same
+    argument covers.  Shifts beyond ``S+1`` read the ``+inf`` sentinel at
+    every ``m`` and are constant trivially, so ``wshift`` clips there.
+
+    The fills use the caps to compute each band only on ``[0, caps[d]]`` and
+    broadcast column ``caps[d]`` across the rest — bit-identical to the
+    unpruned fill, but the small-length bands (the ones with the most rows)
+    shrink to a few dozen columns.
+    """
+    L = v["L"]
+    H = _h_vector(v)
+    WA = np.asarray(v["WA"], dtype=np.int64)
+    WB = np.asarray(v["WABAR"], dtype=np.int64)
+    wshift = int(np.minimum(WA, S + 1).max(initial=0))
+    if allow_fall:
+        wshift = max(wshift, int(np.minimum(WB[1:], S + 1).max(initial=0)))
+    caps = np.empty(L + 1, dtype=np.int64)
+    sv = np.arange(1, L + 2)
+    ma0 = (v["WD"][sv] + WB[sv]
+           + np.maximum(v["OF"][sv], v["OB"][sv]).astype(np.int64))
+    caps[0] = min(S, max(0, int(ma0.max())))
+    for d in range(1, L + 1):
+        ma, mn = _band_thresholds(v, H, d)
+        t = int(mn.max())
+        if allow_fall:
+            t = max(t, int(ma.max()))
+        caps[d] = min(S, max(t, int(caps[d - 1]) + wshift))
+    return caps
+
+
+def band_width(caps: Optional[np.ndarray], d: int, S: int) -> int:
+    """Number of columns band ``d`` must actually compute (``S+1`` unpruned)."""
+    if caps is None:
+        return S + 1
+    return min(S + 1, int(caps[d]) + 1)
 
 
 # ---------------------------------------------------------------------------
@@ -242,29 +352,11 @@ class _FillCtx:
         self.CUM32 = v["CUM_UF"].astype(COST_DTYPE)
         OF, OB, WD = v["OF"], v["OB"], v["WD"]
         self.OF, self.OB, self.WD = OF, OB, WD
-        # H[j] = WA[j-1] + WA[j] + OF[j] (the F_∅-stream liveness of a^{j-1},
-        # a^j plus the forward overhead), j = 1..L — windows of it give m_∅
-        H = np.zeros(L + 1, dtype=np.int64)
-        if L >= 1:
-            H[1:] = WA[:-1] + WA[1:] + np.asarray(OF[1:L + 1], dtype=np.int64)
-        self.H = H
+        self.H = _h_vector(v)
 
     def thresholds(self, d: int) -> Tuple[np.ndarray, np.ndarray]:
         """(m_all, m_none) for every start ``s = 1..L+1-d`` at length d."""
-        L = self.L
-        ns = L + 1 - d
-        sv = np.arange(1, ns + 1)
-        tv = sv + d
-        WD, WB, OF, OB, WA = self.WD, self.WB, self.OF, self.OB, self.WA
-        ma = np.maximum(WD[tv] + WB[sv] + OF[sv].astype(np.int64),
-                        WD[sv] + WB[sv] + OB[sv].astype(np.int64))
-        base = WA[sv] + OF[sv].astype(np.int64)
-        if d >= 2:
-            wmax = sliding_window_view(self.H[2:L + 1], d - 1)[:ns].max(axis=1)
-            mn = WD[tv] + np.maximum(base, wmax)
-        else:
-            mn = WD[tv] + base
-        return ma, mn
+        return _band_thresholds(self.v, self.H, d)
 
     def base_case(self, tab: BandedTable) -> None:
         """``C[s, s, m] = u_f^s + u_b^s`` wherever ``m >= m_all(s, s)``."""
@@ -314,15 +406,18 @@ def _build_lm_band(ctx: _FillCtx, Lm: np.ndarray, tab: BandedTable, d: int
 
 def _fall_plane(ctx: _FillCtx, tab: BandedTable, d: int, ns: int,
                 ma: np.ndarray, out: np.ndarray) -> np.ndarray:
-    """C2: ``u_f^s + C[s+1, t][m - wā^s] + u_b^s``, masked by m_all."""
+    """C2: ``u_f^s + C[s+1, t][m - wā^s] + u_b^s``, masked by m_all.  The
+    plane is computed at whatever column width ``out`` has (the pruned band
+    width — gather indices are column-aligned, so slicing is exact)."""
     S2 = ctx.S2
+    W = out.shape[1]
     rows = ((tab.off[d - 1] + 1 + np.arange(ns, dtype=np.int64)) * S2
             ).astype(np.int32)
-    fi = rows[:, None] + ctx.idx_wb[1:1 + ns]
+    fi = rows[:, None] + ctx.idx_wb[1:1 + ns, :W]
     np.take(tab.data.reshape(-1), fi, out=out)
     out += ctx.UF32[1:1 + ns, None]
     out += ctx.UB32[1:1 + ns, None]
-    out[ctx.ms[None, :] < ma[:, None]] = _INF32
+    out[ctx.ms[None, :W] < ma[:, None]] = _INF32
     return out
 
 
@@ -331,17 +426,22 @@ def _fall_plane(ctx: _FillCtx, tab: BandedTable, d: int, ns: int,
 # ---------------------------------------------------------------------------
 
 def fill_two_tier(dchain, S: int, allow_fall: bool = True,
-                  v: Optional[dict] = None) -> BandedTable:
+                  v: Optional[dict] = None,
+                  prune: Optional[bool] = None) -> BandedTable:
     """Banded bottom-up fill of the paper's Theorem-1 recursion: for each
     sub-chain length the C1 candidates of **all** starts are evaluated one
     split offset at a time — one add of two contiguous companion-table
-    blocks (``R`` + ``Lm``) per split — into a running minimum."""
+    blocks (``R`` + ``Lm``) per split — into a running minimum.  With
+    ``prune`` (default on, env ``REPRO_DP_PRUNE``), each band computes only
+    its unsaturated columns (:func:`saturation_caps`) and broadcasts the
+    saturated tail."""
     if v is None:
         v = _views(dchain)
     L = dchain.length
     ctx = _FillCtx(v, L, S)
     tab = BandedTable(L, S)
     ctx.base_case(tab)
+    caps = saturation_caps(v, S, allow_fall) if _resolve_prune(prune) else None
     nw = _n_workers()
     scratch = _Scratch(L, S, planes=2 * nw + 1, iplanes=0)
     S1 = ctx.S1
@@ -356,38 +456,43 @@ def fill_two_tier(dchain, S: int, allow_fall: bool = True,
     _build_lm_band(ctx, Lm, tab, 0)
     for d in range(1, L + 1):
         ns = L + 1 - d
+        W = band_width(caps, d, S)
         ma, mn = ctx.thresholds(d)
-        res = tab.band(d)[:, 1:]            # starts at +inf; min-accumulated
+        resfull = tab.band(d)[:, 1:]        # starts at +inf; min-accumulated
+        res = resfull[:, :W]
 
         def run(jlo: int, jhi: int, acc: np.ndarray, tmp: np.ndarray):
             for j in range(jlo, jhi):       # split sp = s + 1 + j
                 base = int(off[d - 1 - j]) + 1 + j
-                np.add(R[base:base + ns], Lm[off[j]:off[j] + ns], out=tmp)
+                np.add(R[base:base + ns, :W], Lm[off[j]:off[j] + ns, :W],
+                       out=tmp)
                 np.minimum(acc, tmp, out=acc)
 
-        if nw > 1 and d >= 2 * nw and ns * d * S1 >= _PAR_MIN_ELEMS:
+        if nw > 1 and d >= 2 * nw and ns * d * W >= _PAR_MIN_ELEMS:
             bounds = np.linspace(0, d, nw + 1).astype(int)
             futs, accs = [], []
             ex = _executor(nw)
             for k in range(nw):
                 if bounds[k] == bounds[k + 1]:
                     continue
-                acc = scratch.plane(2 * k, ns, S1)
+                acc = scratch.plane(2 * k, ns, W)
                 acc[:] = _INF32
                 accs.append(acc)
                 futs.append(ex.submit(run, int(bounds[k]), int(bounds[k + 1]),
-                                      acc, scratch.plane(2 * k + 1, ns, S1)))
+                                      acc, scratch.plane(2 * k + 1, ns, W)))
             for f in futs:
                 f.result()
             for acc in accs:
                 np.minimum(res, acc, out=res)
         else:
-            run(0, d, res, scratch.plane(0, ns, S1))
-        res[ctx.ms[None, :] < mn[:, None]] = _INF32
+            run(0, d, res, scratch.plane(0, ns, W))
+        res[ctx.ms[None, :W] < mn[:, None]] = _INF32
         if allow_fall:
-            c2 = scratch.plane(2 * nw, ns, S1)
+            c2 = scratch.plane(2 * nw, ns, W)
             _fall_plane(ctx, tab, d, ns, ma, c2)
             np.minimum(res, c2, out=res)
+        if W <= S:
+            resfull[:, W:] = resfull[:, W - 1:W]   # saturated tail
         _build_r_band(ctx, R, tab, d, clamp_tail=False)
         _build_lm_band(ctx, Lm, tab, d)
     return tab
@@ -398,7 +503,7 @@ def fill_two_tier(dchain, S: int, allow_fall: bool = True,
 # ---------------------------------------------------------------------------
 
 def fill_offload(dchain, S: int, allow_fall: bool = True,
-                 v: Optional[dict] = None
+                 v: Optional[dict] = None, prune: Optional[bool] = None
                  ) -> Tuple[BandedTable, BandedTable]:
     """Banded fill of the offload-aware DP: returns ``(Cb, Ce)`` — input bare
     (all three branches) vs input embedded in an ``ā`` (two-tier branches)."""
@@ -409,6 +514,7 @@ def fill_offload(dchain, S: int, allow_fall: bool = True,
     tb, te = BandedTable(L, S), BandedTable(L, S)
     ctx.base_case(tb)
     ctx.base_case(te)
+    caps = saturation_caps(v, S, allow_fall) if _resolve_prune(prune) else None
     host = dchain.chain.host
     host_on = host is not None and host.enabled
     tpre32 = dchain.chain.prefetch_times().astype(COST_DTYPE)
@@ -451,12 +557,14 @@ def fill_offload(dchain, S: int, allow_fall: bool = True,
         build_lmb3(0)
     for d in range(1, L + 1):
         ns = L + 1 - d
+        W = band_width(caps, d, S)
         ma, mn = ctx.thresholds(d)
-        resb = tb.band(d)[:, 1:]
-        rese = te.band(d)[:, 1:]
+        resb_full = tb.band(d)[:, 1:]
+        rese_full = te.band(d)[:, 1:]
+        resb = resb_full[:, :W]
+        rese = rese_full[:, :W]
         if host_on:
             toffPcol = toffP[:ns, None]
-            tprecol = tpre32[:ns, None]
             wacol = ctx.WA[:ns].astype(np.int32)[:, None]
             par_groups = [(w, ps[:np.searchsorted(ps, ns)])
                           for w, ps in ctx.groups]
@@ -467,9 +575,9 @@ def fill_offload(dchain, S: int, allow_fall: bool = True,
                 lo = int(offb[j])
                 # C1 keeps the parent's input-state bit in the left child;
                 # the right child is always bare (C_b)
-                np.add(R[base:base + ns, :S1], Lmb[lo:lo + ns], out=tmp)
+                np.add(R[base:base + ns, :W], Lmb[lo:lo + ns, :W], out=tmp)
                 np.minimum(accb, tmp, out=accb)
-                np.add(R[base:base + ns, :S1], Lme[lo:lo + ns], out=tmp)
+                np.add(R[base:base + ns, :W], Lme[lo:lo + ns, :W], out=tmp)
                 np.minimum(acce, tmp, out=acce)
                 if not host_on:
                     continue
@@ -481,34 +589,34 @@ def fill_offload(dchain, S: int, allow_fall: bool = True,
                     for w0, rows in par_groups:
                         if len(rows):
                             tmp3[rows] = np.maximum(
-                                Rblk[rows, w0:w0 + S1], toffP[rows][:, None])
+                                Rblk[rows, w0:w0 + W], toffP[rows][:, None])
                 else:
-                    np.add(ctx.raw_wa[1 + j:1 + j + ns], wacol, out=ifi)
+                    np.add(ctx.raw_wa[1 + j:1 + j + ns, :W], wacol, out=ifi)
                     np.clip(ifi, -1, S, out=ifi)
                     ifi += 1
                     ifi += ctx.is2[:ns, None]
                     np.take(flat_b[base * S2:], ifi, out=tmp3)
                     tmp3 += ctx.CUM32[1 + j:1 + j + ns, None]
                     np.maximum(tmp3, toffPcol, out=tmp3)
-                tmp3 += Lmb3[lo:lo + ns]                # C3 left is bare
+                tmp3 += Lmb3[lo:lo + ns, :W]            # C3 left is bare
                 np.minimum(acc3, tmp3, out=acc3)
 
         c3acc = None
-        if nw > 1 and d >= 2 * nw and ns * d * S1 >= _PAR_MIN_ELEMS:
+        if nw > 1 and d >= 2 * nw and ns * d * W >= _PAR_MIN_ELEMS:
             bounds = np.linspace(0, d, nw + 1).astype(int)
             futs, accs = [], []
             ex = _executor(nw)
             for k in range(nw):
                 if bounds[k] == bounds[k + 1]:
                     continue
-                bufs = [scratch.plane(5 * k + i, ns, S1) for i in range(5)]
+                bufs = [scratch.plane(5 * k + i, ns, W) for i in range(5)]
                 bufs[0][:] = _INF32
                 bufs[1][:] = _INF32
                 bufs[2][:] = _INF32
                 accs.append(bufs[:3])
                 futs.append(ex.submit(
                     run, int(bounds[k]), int(bounds[k + 1]), bufs[0], bufs[1],
-                    bufs[2], bufs[3], bufs[4], scratch.iplane(k, ns, S1)))
+                    bufs[2], bufs[3], bufs[4], scratch.iplane(k, ns, W)))
             for f in futs:
                 f.result()
             if host_on:
@@ -520,27 +628,66 @@ def fill_offload(dchain, S: int, allow_fall: bool = True,
                     np.minimum(c3acc, acc[2], out=c3acc)
         else:
             if host_on:
-                c3acc = scratch.plane(2, ns, S1)
+                c3acc = scratch.plane(2, ns, W)
                 c3acc[:] = _INF32
-            run(0, d, resb, rese, c3acc, scratch.plane(0, ns, S1),
-                scratch.plane(3, ns, S1), scratch.iplane(0, ns, S1))
-        infeas = ctx.ms[None, :] < mn[:, None]
+            run(0, d, resb, rese, c3acc, scratch.plane(0, ns, W),
+                scratch.plane(3, ns, W), scratch.iplane(0, ns, W))
+        infeas = ctx.ms[None, :W] < mn[:, None]
         resb[infeas] = _INF32
         rese[infeas] = _INF32
         if allow_fall:
-            c2 = scratch.plane(5 * nw, ns, S1)
+            c2 = scratch.plane(5 * nw, ns, W)
             _fall_plane(ctx, te, d, ns, ma, c2)         # C2 child is embedded
             np.minimum(resb, c2, out=resb)
             np.minimum(rese, c2, out=rese)
         if host_on:
             c3acc[infeas] = _INF32
             np.minimum(resb, c3acc, out=resb)
+        if W <= S:
+            resb_full[:, W:] = resb_full[:, W - 1:W]   # saturated tail
+            rese_full[:, W:] = rese_full[:, W - 1:W]
         _build_r_band(ctx, R, tb, d, clamp_tail=slice_c3)
         _build_lm_band(ctx, Lmb, tb, d)
         _build_lm_band(ctx, Lme, te, d)
         if host_on:
             build_lmb3(d)
     return tb, te
+
+
+# ---------------------------------------------------------------------------
+# Impl dispatch — the seam every solver-side kernel goes through
+# ---------------------------------------------------------------------------
+
+def fill_tables(dchain, S: int, impl: str = "banded",
+                allow_fall: bool = True, v: Optional[dict] = None,
+                prune: Optional[bool] = None) -> BandedTable:
+    """Two-tier band fill behind the ``impl`` seam: ``"banded"`` runs this
+    module's numpy kernels; ``"pallas"`` dispatches (lazily, so the numpy
+    core never imports jax) to :mod:`repro.kernels.dp_fill` — the Pallas
+    band-fill kernel, jit on TPU and interpret-mode on CPU.  Both produce the
+    same :class:`BandedTable` layout, so reconstruction is impl-agnostic.
+    (``"reference"`` keeps its own table format and stays in the solvers.)"""
+    if impl == "pallas":
+        from ..kernels.dp_fill import ops as _dp_fill_ops
+        return _dp_fill_ops.fill_two_tier(dchain, S, allow_fall=allow_fall,
+                                          v=v, prune=prune)
+    if impl != "banded":
+        raise ValueError(f"fill_tables cannot run impl {impl!r}")
+    return fill_two_tier(dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+
+
+def fill_tables_offload(dchain, S: int, impl: str = "banded",
+                        allow_fall: bool = True, v: Optional[dict] = None,
+                        prune: Optional[bool] = None
+                        ) -> Tuple[BandedTable, BandedTable]:
+    """Offload (three-tier) band fill behind the same ``impl`` seam."""
+    if impl == "pallas":
+        from ..kernels.dp_fill import ops as _dp_fill_ops
+        return _dp_fill_ops.fill_offload(dchain, S, allow_fall=allow_fall,
+                                         v=v, prune=prune)
+    if impl != "banded":
+        raise ValueError(f"fill_tables_offload cannot run impl {impl!r}")
+    return fill_offload(dchain, S, allow_fall=allow_fall, v=v, prune=prune)
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ The builder returns ``f(params, x)`` where ``params`` is a per-stage sequence;
 
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Callable, Sequence
 
 import jax
 

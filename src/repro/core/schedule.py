@@ -44,7 +44,7 @@ exact for this simulator).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Sequence, Tuple
+from typing import List, Tuple
 
 from .chain import Chain
 

@@ -6,7 +6,7 @@ input ``a^{s-1}`` and the gradient ``δ^t`` are live, with ``a^{s-1}`` *not*
 counted against ``m`` (``δ^t`` *is* counted — it appears in the
 :math:`m_\\varnothing`/:math:`m_{all}` thresholds).
 
-Two fill implementations share the recursion:
+Three fill implementations share the recursion (``dp_kernels.KNOWN_IMPLS``):
 
 - ``impl="banded"`` (default): the length-banded, split-batched float32
   kernels of :mod:`repro.core.dp_kernels` — all starts of a sub-chain length
@@ -16,9 +16,19 @@ Two fill implementations share the recursion:
   the O(L) cells the reconstruction visits instead of being stored.
   ``expected_time`` is recomputed in float64 by the simulator, so the
   published makespan is exact.
+- ``impl="pallas"``: the same band recursion with the split-batched min
+  reduction on the Pallas kernel of :mod:`repro.kernels.dp_fill` — jit on
+  TPU, interpret-mode CPU fallback elsewhere; band-exact against
+  ``"banded"`` (tested on f32-exact chains).
 - ``impl="reference"``: the original per-cell float64 fill, retained as the
   slow-but-transparent comparator (kernel-equivalence tests and benchmarks
-  diff the two).
+  diff the implementations).
+
+All three share the saturated m-column pruning pass
+(:func:`repro.core.dp_kernels.saturation_caps`): per-band column frontiers
+are computed before any fill runs, each band is filled only up to its
+frontier, and the saturated tail is broadcast — bit-identical tables for a
+fraction of the work (``REPRO_DP_PRUNE=0`` disables).
 
 Results are memoized through :mod:`repro.core.solver_cache` (in-memory LRU +
 on-disk store keyed by a content hash of the discretized problem), so
@@ -49,8 +59,9 @@ from .schedule import BWD, F_ALL, F_CK, F_NONE, Schedule, simulate
 
 def _resolve_impl(impl: Optional[str]) -> str:
     impl = impl or os.environ.get("REPRO_DP_IMPL", "banded")
-    if impl not in ("banded", "reference"):
-        raise ValueError(f"unknown DP impl {impl!r}")
+    if impl not in dp_kernels.KNOWN_IMPLS:
+        raise ValueError(f"unknown DP impl {impl!r}; "
+                         f"expected one of {dp_kernels.KNOWN_IMPLS}")
     return impl
 
 
@@ -118,13 +129,20 @@ class _Tables:
         return self.C.nbytes + self.choice.nbytes + self.split.nbytes
 
 
-def _fill_tables(dchain, tables: _Tables, allow_fall: bool = True) -> None:
+def _fill_tables(dchain, tables: _Tables, allow_fall: bool = True,
+                 prune: Optional[bool] = None) -> None:
     """Bottom-up DP fill.  ``allow_fall=False`` disables the C2 (``F_all``)
-    branch for sub-chains of length > 1 — the revolve comparator."""
+    branch for sub-chains of length > 1 — the revolve comparator.  Saturated
+    m-columns are pruned per band (the shared
+    :func:`repro.core.dp_kernels.saturation_caps` pass): only columns up to
+    the band's frontier are computed and the frontier column is broadcast
+    across the rest — bit-identical values, ``REPRO_DP_PRUNE=0`` disables."""
     v = _views(dchain)
     L, S = tables.L, tables.S
     C, choice, split = tables.C, tables.choice, tables.split
     ms = np.arange(S + 1)
+    caps = (dp_kernels.saturation_caps(v, S, allow_fall)
+            if dp_kernels._resolve_prune(prune) else None)
 
     # base cases: C[s, s, m]
     for s in range(1, L + 2):
@@ -134,39 +152,52 @@ def _fill_tables(dchain, tables: _Tables, allow_fall: bool = True) -> None:
 
     # bottom-up by sub-chain length
     for d in range(1, L + 1):
+        W = dp_kernels.band_width(caps, d, S)
+        msW = ms[:W]
         for s in range(1, L + 2 - d):
             t = s + d
+
+            def bcast():
+                if W <= S:
+                    C[s, t, W:] = C[s, t, W - 1]
+                    choice[s, t, W:] = choice[s, t, W - 1]
+                    split[s, t, W:] = split[s, t, W - 1]
+
             # --- C1: start with F_ck^s, split at s' ----------------------
             sps = np.arange(s + 1, t + 1)
             # candidate[k, m] for split sps[k]
-            cand = np.empty((len(sps), S + 1), dtype=np.float64)
+            cand = np.empty((len(sps), W), dtype=np.float64)
             for k, sp in enumerate(sps):
                 fwd = v["CUM_UF"][sp - 1] - v["CUM_UF"][s - 1]
                 cand[k] = (fwd
-                           + _shift(C[sp, t], int(v["WA"][sp - 1]))
-                           + C[s, sp - 1])
+                           + _shift(C[sp, t, :W], int(v["WA"][sp - 1]))
+                           + C[s, sp - 1, :W])
             best_k = np.argmin(cand, axis=0)
-            c1 = cand[best_k, ms]
-            c1[ms < _m_none(v, s, t)] = INFEASIBLE
+            c1 = cand[best_k, msW]
+            c1[msW < _m_none(v, s, t)] = INFEASIBLE
             if not allow_fall:
-                C[s, t] = c1
-                ch = np.zeros(S + 1, dtype=np.int8)
+                C[s, t, :W] = c1
+                ch = np.zeros(W, dtype=np.int8)
                 ch[np.isfinite(c1)] = 1
-                choice[s, t] = ch
-                split[s, t] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
+                choice[s, t, :W] = ch
+                split[s, t, :W] = np.where(ch == 1, sps[best_k],
+                                           0).astype(np.int16)
+                bcast()
                 continue
             # --- C2: start with F_all^s ---------------------------------
-            c2 = v["UF"][s] + _shift(C[s + 1, t], int(v["WABAR"][s])) + v["UB"][s]
-            c2[ms < _m_all(v, s, t)] = INFEASIBLE
+            c2 = (v["UF"][s] + _shift(C[s + 1, t, :W], int(v["WABAR"][s]))
+                  + v["UB"][s])
+            c2[msW < _m_all(v, s, t)] = INFEASIBLE
             # --- combine -------------------------------------------------
             use_all = c2 < c1  # ties -> Ck (arbitrary, both optimal)
-            C[s, t] = np.where(use_all, c2, c1)
-            ch = np.zeros(S + 1, dtype=np.int8)
+            C[s, t, :W] = np.where(use_all, c2, c1)
+            ch = np.zeros(W, dtype=np.int8)
             ch[np.isfinite(c1)] = 1
             ch[use_all & np.isfinite(c2)] = 2
-            ch[~np.isfinite(C[s, t])] = 0
-            choice[s, t] = ch
-            split[s, t] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
+            ch[~np.isfinite(C[s, t, :W])] = 0
+            choice[s, t, :W] = ch
+            split[s, t, :W] = np.where(ch == 1, sps[best_k], 0).astype(np.int16)
+            bcast()
 
 
 # ---------------------------------------------------------------------------
@@ -239,9 +270,10 @@ def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
     persistent strategy in the Automatic Differentiation model, converted to a
     valid schedule by running ``F_all`` right before each backward.
 
-    ``impl`` picks the fill kernels (``"banded"`` default, ``"reference"``
-    for the seed float64 path; env ``REPRO_DP_IMPL`` overrides the default).
-    ``cache=False`` bypasses the solver cache (used by benchmarks).
+    ``impl`` picks the fill kernels (``"banded"`` default, ``"pallas"`` for
+    the Pallas band-fill kernel, ``"reference"`` for the seed float64 path;
+    env ``REPRO_DP_IMPL`` overrides the default).  ``cache=False`` bypasses
+    the solver cache (used by benchmarks).
     """
     impl = _resolve_impl(impl)
     dchain = chain.discretize(mem_limit, num_slots)
@@ -260,7 +292,8 @@ def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
             return Solution(True, float(tables.C[1, L + 1, m_top]),
                             Schedule(L, ops), tree, mem_limit, num_slots,
                             m_top, tables.nbytes)
-        tab = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall, v=v)
+        tab = dp_kernels.fill_tables(dchain, S, impl=impl,
+                                     allow_fall=allow_fall, v=v)
         if m_top < 0 or not np.isfinite(tab.row(1, L + 1)[m_top]):
             return Solution(False, INFEASIBLE, None, None, mem_limit,
                             num_slots, max(m_top, 0), tab.nbytes)
@@ -294,8 +327,8 @@ def solve_min_memory(chain: Chain, num_slots: int = 500,
             table_bytes = tables.nbytes
             rebuild_fn = lambda m: _rebuild(v, tables, 1, L + 1, m)  # noqa: E731
         else:
-            tab = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall,
-                                           v=v)
+            tab = dp_kernels.fill_tables(dchain, S, impl=impl,
+                                         allow_fall=allow_fall, v=v)
             top = tab.row(1, L + 1)
             table_bytes = tab.nbytes
             rebuild_fn = lambda m: _rebuild_banded(v, tab, 1, L + 1, m,  # noqa: E731

@@ -1,0 +1,171 @@
+"""Length-banded DP band fill — Pallas TPU kernel.
+
+The checkpointing DP's hot path is, per sub-chain length ``d``, a min
+reduction over ``d`` split candidates, where the candidate of split offset
+``j`` is one elementwise add of two pre-shifted companion-table planes (see
+:mod:`repro.core.dp_kernels`):
+
+    cand_j = R[band d-1-j, rows j+1..j+ns] + Lm[band j, rows 1..ns]
+
+The kernel runs that reduction on a grid of ``(row_tiles, d)`` with the
+split dimension innermost: each grid step streams one split's
+``(block_rows, W)`` companion tiles into VMEM, adds them on the VPU, and
+min-accumulates into the output tile (initialized at ``j == 0`` — the
+standard revisited-output accumulation pattern; TPU grids iterate the last
+dimension sequentially, so the running minimum is race-free).  The offload
+variant carries three accumulators (input-bare C1, input-embedded C1, and
+the C3 offload plane whose PCIe stall is pre-folded into a
+``max(X, T_off)``) so the three-tier fill costs one extra pass over the same
+tiles rather than three kernels.
+
+Exactness: every operation is an f32 add / min / max of the same operand
+pairs the numpy banded fill uses, and IEEE min/max do not round — on chains
+whose quantities are exactly representable in f32 the result is bit-equal to
+``impl="banded"`` in any evaluation order (asserted by
+``tests/test_dp_fill_pallas.py``).
+
+The driver in :mod:`.ops` stages one band per call; companion tables are
+rebuilt on the host between bands (the recursion is sequential in ``d``).
+Keeping the whole band loop device-resident is the natural next step once
+the dispatch seam (this module) is proven.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Rows per VMEM tile.  At the default S=500 discretization a (256, 501) f32
+#: tile is ~0.5 MB; with two inputs and one output per step (five inputs and
+#: three outputs for the offload variant) the working set stays well under
+#: the ~16 MB VMEM budget.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _pad_rows(x: jnp.ndarray, rows: int, value: float) -> jnp.ndarray:
+    pad = rows - x.shape[1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad), (0, 0)), constant_values=value)
+
+
+def _band_min_kernel(r_ref, lm_ref, o_ref):
+    j = pl.program_id(1)
+    cand = r_ref[0] + lm_ref[0]
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = cand
+
+    @pl.when(j != 0)
+    def _():
+        o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+def band_min_two_tier(
+    r: jax.Array,
+    lm: jax.Array,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Two-tier C1 reduction: ``min_j (r[j] + lm[j])``.
+
+    ``r``/``lm``: ``(d, ns, W)`` stacked per-split companion planes (``r``
+    pre-shifted by the split's memory cost, ``+inf`` where out of budget).
+    Returns the ``(ns, W)`` running minimum.
+    """
+    d, ns, w = r.shape
+    block_rows = min(block_rows, ns)
+    ns_pad = pl.cdiv(ns, block_rows) * block_rows
+    r = _pad_rows(r, ns_pad, jnp.inf)
+    lm = _pad_rows(lm, ns_pad, 0.0)
+    grid = (ns_pad // block_rows, d)
+    out = pl.pallas_call(
+        _band_min_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows, w), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1, block_rows, w), lambda i, j: (j, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, w), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ns_pad, w), r.dtype),
+        interpret=interpret,
+    )(r, lm)
+    return out[:ns]
+
+
+def _band_min_offload_kernel(
+    r_ref, r3_ref, lmb_ref, lme_ref, lmb3_ref, toff_ref, ob_ref, oe_ref, o3_ref
+):
+    j = pl.program_id(1)
+    r = r_ref[0]
+    cb = r + lmb_ref[0]
+    ce = r + lme_ref[0]
+    # C3: X + max(T_off - X, 0) = max(X, T_off); the prefetch charge is
+    # pre-added to the left-child companion lmb3
+    c3 = jnp.maximum(r3_ref[0], toff_ref[...]) + lmb3_ref[0]
+
+    @pl.when(j == 0)
+    def _():
+        ob_ref[...] = cb
+        oe_ref[...] = ce
+        o3_ref[...] = c3
+
+    @pl.when(j != 0)
+    def _():
+        ob_ref[...] = jnp.minimum(ob_ref[...], cb)
+        oe_ref[...] = jnp.minimum(oe_ref[...], ce)
+        o3_ref[...] = jnp.minimum(o3_ref[...], c3)
+
+
+def band_min_offload(
+    r: jax.Array,
+    r3: jax.Array,
+    lmb: jax.Array,
+    lme: jax.Array,
+    lmb3: jax.Array,
+    toff: jax.Array,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Offload-band reduction: three accumulators over the same split loop.
+
+    ``r``: shared pre-shifted right-child planes (C1, both input states);
+    ``r3``: the C3 right-child planes read at the parent-side column offset
+    (hidden work ``X`` in the CUM-shifted domain); ``lmb``/``lme``/``lmb3``:
+    left-child companions (bare / embedded / bare-with-prefetch-charge);
+    ``toff``: ``(ns, 1)`` CUM-shifted offload times.  Returns
+    ``(min C1_bare, min C1_embedded, min C3)``, each ``(ns, W)``.
+    """
+    d, ns, w = r.shape
+    block_rows = min(block_rows, ns)
+    ns_pad = pl.cdiv(ns, block_rows) * block_rows
+    r = _pad_rows(r, ns_pad, jnp.inf)
+    r3 = _pad_rows(r3, ns_pad, jnp.inf)
+    lmb = _pad_rows(lmb, ns_pad, 0.0)
+    lme = _pad_rows(lme, ns_pad, 0.0)
+    lmb3 = _pad_rows(lmb3, ns_pad, 0.0)
+    pad = ns_pad - toff.shape[0]
+    if pad:
+        toff = jnp.pad(toff, ((0, pad), (0, 0)))
+    grid = (ns_pad // block_rows, d)
+    plane = pl.BlockSpec((1, block_rows, w), lambda i, j: (j, i, 0))
+    out = pl.BlockSpec((block_rows, w), lambda i, j: (i, 0))
+    shape = jax.ShapeDtypeStruct((ns_pad, w), r.dtype)
+    ob, oe, o3 = pl.pallas_call(
+        _band_min_offload_kernel,
+        grid=grid,
+        in_specs=[
+            plane,
+            plane,
+            plane,
+            plane,
+            plane,
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[out, out, out],
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(r, r3, lmb, lme, lmb3, toff)
+    return ob[:ns], oe[:ns], o3[:ns]

@@ -1,0 +1,218 @@
+"""Band-fill drivers for ``impl="pallas"`` — the solver-side dispatch seam.
+
+These mirror the numpy banded fills of :mod:`repro.core.dp_kernels` exactly
+(same companion tables, same thresholds, same saturated m-column pruning,
+same C2 fall plane) but hand the per-band split reduction — the DP's
+O(L·band) hot loop — to the Pallas kernels in :mod:`.kernel`.  The band
+recursion itself stays on the host: companion tables are republished after
+each band, one kernel launch per length.
+
+Dispatch seam: on a TPU backend the kernels run jitted; everywhere else they
+fall back to Pallas interpret mode automatically, so ``impl="pallas"`` is
+runnable (slowly) in CPU CI — that is what the parity suite
+``tests/test_dp_fill_pallas.py`` exercises.  ``set_interpret`` overrides the
+automatic choice, matching the other kernel packages.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from ...core import dp_kernels
+from ...core.dp_kernels import (
+    COST_DTYPE,
+    INFEASIBLE,
+    BandedTable,
+    _build_lm_band,
+    _build_r_band,
+    _fall_plane,
+    _FillCtx,
+    _INF32,
+    _views,
+)
+from . import kernel
+
+_INTERPRET: list = [None]
+
+
+def set_interpret(flag: Optional[bool]) -> None:
+    """``True`` forces interpret mode, ``False`` forces compiled dispatch,
+    ``None`` restores the automatic choice (compiled on TPU, interpret
+    elsewhere)."""
+    _INTERPRET[0] = flag if flag is None else bool(flag)
+
+
+def interpret_mode() -> bool:
+    if _INTERPRET[0] is not None:
+        return _INTERPRET[0]
+    return jax.default_backend() != "tpu"
+
+
+def fill_two_tier(dchain, S: int, allow_fall: bool = True,
+                  v: Optional[dict] = None,
+                  prune: Optional[bool] = None) -> BandedTable:
+    """Two-tier band fill with the split reduction on the Pallas kernel.
+    Band-exact against :func:`repro.core.dp_kernels.fill_two_tier` on
+    f32-exact chains (same adds, same mins — IEEE min does not round)."""
+    if v is None:
+        v = _views(dchain)
+    L = dchain.length
+    ctx = _FillCtx(v, L, S)
+    tab = BandedTable(L, S)
+    ctx.base_case(tab)
+    caps = (dp_kernels.saturation_caps(v, S, allow_fall)
+            if dp_kernels._resolve_prune(prune) else None)
+    interpret = interpret_mode()
+    S1 = ctx.S1
+    off = tab.off
+    R = np.full((int(off[-1]), S1), INFEASIBLE, dtype=COST_DTYPE)
+    Lm = np.empty((int(off[-1]), S1), dtype=COST_DTYPE)
+    _build_r_band(ctx, R, tab, 0, clamp_tail=False)
+    _build_lm_band(ctx, Lm, tab, 0)
+    for d in range(1, L + 1):
+        ns = L + 1 - d
+        W = dp_kernels.band_width(caps, d, S)
+        ma, mn = ctx.thresholds(d)
+        # stack the d split planes for this band; the kernel min-reduces them
+        rs = np.empty((d, ns, W), dtype=COST_DTYPE)
+        ls = np.empty((d, ns, W), dtype=COST_DTYPE)
+        for j in range(d):                  # split sp = s + 1 + j
+            base = int(off[d - 1 - j]) + 1 + j
+            rs[j] = R[base:base + ns, :W]
+            ls[j] = Lm[off[j]:off[j] + ns, :W]
+        resfull = tab.band(d)[:, 1:]
+        res = resfull[:, :W]
+        res[:] = np.asarray(
+            kernel.band_min_two_tier(rs, ls, interpret=interpret))
+        res[ctx.ms[None, :W] < mn[:, None]] = _INF32
+        if allow_fall:
+            c2 = np.empty((ns, W), dtype=COST_DTYPE)
+            _fall_plane(ctx, tab, d, ns, ma, c2)
+            np.minimum(res, c2, out=res)
+        if W <= S:
+            resfull[:, W:] = resfull[:, W - 1:W]   # saturated tail
+        _build_r_band(ctx, R, tab, d, clamp_tail=False)
+        _build_lm_band(ctx, Lm, tab, d)
+    return tab
+
+
+def fill_offload(dchain, S: int, allow_fall: bool = True,
+                 v: Optional[dict] = None, prune: Optional[bool] = None
+                 ) -> Tuple[BandedTable, BandedTable]:
+    """Offload (three-tier) band fill on the Pallas kernel: the C3 stall is
+    folded into the kernel's ``max(X, T_off)`` and all three accumulators
+    ride one pass over the split planes."""
+    if v is None:
+        v = _views(dchain)
+    L = dchain.length
+    ctx = _FillCtx(v, L, S)
+    tb, te = BandedTable(L, S), BandedTable(L, S)
+    ctx.base_case(tb)
+    ctx.base_case(te)
+    caps = (dp_kernels.saturation_caps(v, S, allow_fall)
+            if dp_kernels._resolve_prune(prune) else None)
+    interpret = interpret_mode()
+    host = dchain.chain.host
+    host_on = host is not None and host.enabled
+    tpre32 = dchain.chain.prefetch_times().astype(COST_DTYPE)
+    S1, S2 = ctx.S1, ctx.S2
+    flat_b = tb.data.reshape(-1)
+    offb = tb.off
+    slice_c3 = host_on and ctx.wa_uncapped
+    ncells = int(offb[-1])
+    R = np.full((ncells, S1 + (ctx.wcap if slice_c3 else 0)),
+                INFEASIBLE, dtype=COST_DTYPE)
+    Lmb = np.empty((ncells, S1), dtype=COST_DTYPE)
+    Lme = np.empty((ncells, S1), dtype=COST_DTYPE)
+    Lmb3 = np.empty((ncells, S1), dtype=COST_DTYPE) if host_on else None
+    _build_r_band(ctx, R, tb, 0, clamp_tail=slice_c3)
+    _build_lm_band(ctx, Lmb, tb, 0)
+    _build_lm_band(ctx, Lme, te, 0)
+    toffP = (dchain.chain.offload_times()
+             + np.asarray(v["CUM_UF"][:L + 1])).astype(COST_DTYPE)
+
+    def build_lmb3(d: int) -> None:
+        ns_ = L + 1 - d
+        lo = int(offb[d])
+        np.add(Lmb[lo:lo + ns_], tpre32[:ns_, None], out=Lmb3[lo:lo + ns_])
+
+    if host_on:
+        build_lmb3(0)
+    for d in range(1, L + 1):
+        ns = L + 1 - d
+        W = dp_kernels.band_width(caps, d, S)
+        ma, mn = ctx.thresholds(d)
+        rs = np.empty((d, ns, W), dtype=COST_DTYPE)
+        lbs = np.empty((d, ns, W), dtype=COST_DTYPE)
+        les = np.empty((d, ns, W), dtype=COST_DTYPE)
+        if host_on:
+            r3s = np.empty((d, ns, W), dtype=COST_DTYPE)
+            lb3s = np.empty((d, ns, W), dtype=COST_DTYPE)
+            wacol = ctx.WA[:ns].astype(np.int32)[:, None]
+            par_groups = [(w, ps[:np.searchsorted(ps, ns)])
+                          for w, ps in ctx.groups]
+            ifi = np.empty((ns, W), dtype=np.int32)
+        for j in range(d):                  # split sp = s + 1 + j
+            base = int(offb[d - 1 - j]) + 1 + j
+            lo = int(offb[j])
+            rs[j] = R[base:base + ns, :W]
+            lbs[j] = Lmb[lo:lo + ns, :W]
+            les[j] = Lme[lo:lo + ns, :W]
+            if not host_on:
+                continue
+            lb3s[j] = Lmb3[lo:lo + ns, :W]
+            # C3 right plane: R read at the parent-side column offset
+            # WA[s-1] (slots of the offloaded input reclaimed); the kernel
+            # folds the stall max on top
+            if slice_c3:
+                Rblk = R[base:base + ns]
+                for w0, rows in par_groups:
+                    if len(rows):
+                        r3s[j, rows] = Rblk[rows, w0:w0 + W]
+            else:
+                np.add(ctx.raw_wa[1 + j:1 + j + ns, :W], wacol, out=ifi)
+                np.clip(ifi, -1, S, out=ifi)
+                ifi += 1
+                ifi += ctx.is2[:ns, None]
+                np.take(flat_b[base * S2:], ifi, out=r3s[j])
+                r3s[j] += ctx.CUM32[1 + j:1 + j + ns, None]
+        resb_full = tb.band(d)[:, 1:]
+        rese_full = te.band(d)[:, 1:]
+        resb = resb_full[:, :W]
+        rese = rese_full[:, :W]
+        if host_on:
+            ob, oe, o3 = kernel.band_min_offload(
+                rs, r3s, lbs, les, lb3s, toffP[:ns, None],
+                interpret=interpret)
+            resb[:] = np.asarray(ob)
+            rese[:] = np.asarray(oe)
+            c3acc = np.array(o3)        # writable copy (the mask edits it)
+        else:
+            resb[:] = np.asarray(
+                kernel.band_min_two_tier(rs, lbs, interpret=interpret))
+            rese[:] = np.asarray(
+                kernel.band_min_two_tier(rs, les, interpret=interpret))
+            c3acc = None
+        infeas = ctx.ms[None, :W] < mn[:, None]
+        resb[infeas] = _INF32
+        rese[infeas] = _INF32
+        if allow_fall:
+            c2 = np.empty((ns, W), dtype=COST_DTYPE)
+            _fall_plane(ctx, te, d, ns, ma, c2)         # C2 child is embedded
+            np.minimum(resb, c2, out=resb)
+            np.minimum(rese, c2, out=rese)
+        if host_on:
+            c3acc[infeas] = _INF32
+            np.minimum(resb, c3acc, out=resb)
+        if W <= S:
+            resb_full[:, W:] = resb_full[:, W - 1:W]   # saturated tail
+            rese_full[:, W:] = rese_full[:, W - 1:W]
+        _build_r_band(ctx, R, tb, d, clamp_tail=slice_c3)
+        _build_lm_band(ctx, Lmb, tb, d)
+        _build_lm_band(ctx, Lme, te, d)
+        if host_on:
+            build_lmb3(d)
+    return tb, te

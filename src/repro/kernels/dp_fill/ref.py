@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the DP band-fill reductions (kernel parity tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def band_min_two_tier(r: jax.Array, lm: jax.Array) -> jax.Array:
+    """``min_j (r[j] + lm[j])`` over the stacked split axis."""
+    return jnp.min(r + lm, axis=0)
+
+
+def band_min_offload(
+    r: jax.Array,
+    r3: jax.Array,
+    lmb: jax.Array,
+    lme: jax.Array,
+    lmb3: jax.Array,
+    toff: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The three offload-band accumulators, reduced in one shot."""
+    cb = jnp.min(r + lmb, axis=0)
+    ce = jnp.min(r + lme, axis=0)
+    c3 = jnp.min(jnp.maximum(r3, toff[None]) + lmb3, axis=0)
+    return cb, ce, c3

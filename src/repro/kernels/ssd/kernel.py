@@ -16,8 +16,6 @@ onto the 128×128 systolic array with Q=chunk as the contracting tile.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -13,7 +13,6 @@ all-to-all / collective-permute (including the async ``-start`` forms).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, Optional
 

@@ -16,7 +16,7 @@ from ..core.chain import Chain
 from ..core.policies import resolve_policy
 from ..plan import MemoryPlan, two_tier_fallback
 from ..distributed.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
-                                    axis_rules, current_rules, spec_for)
+                                    spec_for)
 from ..models.flops import stage_flops
 from ..models.lm import StagedLM
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update

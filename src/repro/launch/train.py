@@ -42,8 +42,10 @@ def main(argv=None) -> int:
     ap.add_argument("--num-slots", type=int, default=None,
                     help="DP discretization slots (default: plan default)")
     ap.add_argument("--solver-impl", default=None,
-                    choices=("banded", "reference"),
-                    help="DP fill kernels (default: banded / REPRO_DP_IMPL)")
+                    choices=("banded", "pallas", "reference"),
+                    help="DP fill kernels: banded numpy, the Pallas band-fill"
+                         " kernel (jit on TPU, interpret on CPU), or the seed"
+                         " float64 path (default: banded / REPRO_DP_IMPL)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--model-parallel", type=int, default=1)

@@ -12,7 +12,6 @@ dry-run lowers since Pallas cannot target the CPU backend)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 

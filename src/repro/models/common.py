@@ -2,14 +2,12 @@
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..distributed.sharding import constrain
 
 Params = Dict[str, Any]
 

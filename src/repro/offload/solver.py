@@ -47,7 +47,6 @@ from ..core.schedule import (BWD, F_ALL, F_CK, F_NONE, F_OFF, PREFETCH,
                              Schedule, simulate)
 from ..core.solver import (INFEASIBLE, AllNode, CkNode, Leaf, Solution,
                            _m_all, _m_none, _resolve_impl, _shift, _views)
-from ..core.solver import Tree as CoreTree
 from ..core.solver import solve_optimal as _solve_optimal_two_tier
 
 
@@ -101,7 +100,8 @@ class _OffloadTables:
 
 
 def _fill_tables_offload(dchain, tables: _OffloadTables,
-                         allow_fall: bool = True) -> None:
+                         allow_fall: bool = True,
+                         prune: Optional[bool] = None) -> None:
     v = _views(dchain)
     L, S = tables.L, tables.S
     ms = np.arange(S + 1)
@@ -110,6 +110,8 @@ def _fill_tables_offload(dchain, tables: _OffloadTables,
     # transfer times use *continuous* sizes (times are never discretized)
     t_off = dchain.chain.offload_times()
     t_pre = dchain.chain.prefetch_times()
+    caps = (dp_kernels.saturation_caps(v, S, allow_fall)
+            if dp_kernels._resolve_prune(prune) else None)
 
     # base cases: a single stage is F_all^s; B^s in both input states
     for s in range(1, L + 2):
@@ -119,33 +121,40 @@ def _fill_tables_offload(dchain, tables: _OffloadTables,
             ch[s, s, feas] = 2
 
     for d in range(1, L + 1):
+        W = dp_kernels.band_width(caps, d, S)
+        msW = ms[:W]
         for s in range(1, L + 2 - d):
             t = s + d
             sps = np.arange(s + 1, t + 1)
             m_none = _m_none(v, s, t)
 
             # shared across branches: the right segment is always entered
-            # with a bare input (produced by the F_∅ stream)
-            right = np.empty((len(sps), S + 1), dtype=np.float64)
+            # with a bare input (produced by the F_∅ stream).  All reads
+            # below are column-aligned on [0, W) — a negative (memory-gain)
+            # C3 shift clamps to column W-1, which the saturation invariant
+            # makes equal to column S, so slicing stays exact.
+            right = np.empty((len(sps), W), dtype=np.float64)
             fwds = np.empty(len(sps))
             for k, sp in enumerate(sps):
                 fwds[k] = v["CUM_UF"][sp - 1] - v["CUM_UF"][s - 1]
-                right[k] = fwds[k] + _shift(Cb[sp, t], int(v["WA"][sp - 1]))
+                right[k] = fwds[k] + _shift(Cb[sp, t, :W],
+                                            int(v["WA"][sp - 1]))
 
             # --- C2: F_all^s first; the child's input is embedded in ā^s --
             c2 = None
             if allow_fall:
-                c2 = (v["UF"][s] + _shift(Ce[s + 1, t], int(v["WABAR"][s]))
-                      + v["UB"][s])
-                c2[ms < _m_all(v, s, t)] = INFEASIBLE
+                c2 = (v["UF"][s] + _shift(Ce[s + 1, t, :W],
+                                          int(v["WABAR"][s])) + v["UB"][s])
+                c2[msW < _m_all(v, s, t)] = INFEASIBLE
 
             # --- C3 right segments: budget gains the reclaimed input slots
             cand3 = None
             if host is not None and host.enabled and np.isfinite(t_off[s - 1]):
-                cand3 = np.empty((len(sps), S + 1), dtype=np.float64)
+                cand3 = np.empty((len(sps), W), dtype=np.float64)
                 for k, sp in enumerate(sps):
                     hidden = fwds[k] + _shift(
-                        Cb[sp, t], int(v["WA"][sp - 1]) - int(v["WA"][s - 1]))
+                        Cb[sp, t, :W],
+                        int(v["WA"][sp - 1]) - int(v["WA"][s - 1]))
                     stall = np.maximum(0.0, t_off[s - 1] - hidden)
                     cand3[k] = hidden + stall + t_pre[s - 1]
 
@@ -154,13 +163,13 @@ def _fill_tables_offload(dchain, tables: _OffloadTables,
                 # --- C1: F_ck^s first; left child keeps this input state --
                 cand1 = np.empty_like(right)
                 for k, sp in enumerate(sps):
-                    cand1[k] = right[k] + C[s, sp - 1]
+                    cand1[k] = right[k] + C[s, sp - 1, :W]
                 best1 = np.argmin(cand1, axis=0)
-                c1 = cand1[best1, ms]
-                c1[ms < m_none] = INFEASIBLE
+                c1 = cand1[best1, msW]
+                c1[msW < m_none] = INFEASIBLE
 
                 best = c1
-                ch = np.zeros(S + 1, dtype=np.int8)
+                ch = np.zeros(W, dtype=np.int8)
                 ch[np.isfinite(c1)] = 1
                 sp_arr = np.where(ch == 1, sps[best1], 0).astype(np.int16)
 
@@ -173,19 +182,23 @@ def _fill_tables_offload(dchain, tables: _OffloadTables,
                 if bare and cand3 is not None:
                     full3 = np.empty_like(cand3)
                     for k, sp in enumerate(sps):
-                        full3[k] = cand3[k] + Cb[s, sp - 1]
+                        full3[k] = cand3[k] + Cb[s, sp - 1, :W]
                     best3 = np.argmin(full3, axis=0)
-                    c3 = full3[best3, ms]
-                    c3[ms < m_none] = INFEASIBLE
+                    c3 = full3[best3, msW]
+                    c3[msW < m_none] = INFEASIBLE
                     use3 = c3 < best
                     best = np.where(use3, c3, best)
                     ch[use3 & np.isfinite(c3)] = 3
                     sp_arr[use3] = sps[best3][use3]
 
-                C[s, t] = best
+                C[s, t, :W] = best
                 ch[~np.isfinite(best)] = 0
-                CH[s, t] = ch
-                SP[s, t] = sp_arr
+                CH[s, t, :W] = ch
+                SP[s, t, :W] = sp_arr
+                if W <= S:
+                    C[s, t, W:] = C[s, t, W - 1]
+                    CH[s, t, W:] = CH[s, t, W - 1]
+                    SP[s, t, W:] = SP[s, t, W - 1]
 
 
 # ---------------------------------------------------------------------------
@@ -311,8 +324,8 @@ def _solve_offload(chain: Chain, dchain, mem_limit: float, num_slots: int,
         top = tables.Cb[1, L + 1]
         table_bytes = tables.nbytes
     else:
-        tb, te = dp_kernels.fill_offload(dchain, S, allow_fall=allow_fall,
-                                         v=v)
+        tb, te = dp_kernels.fill_tables_offload(dchain, S, impl=impl,
+                                                allow_fall=allow_fall, v=v)
         top = tb.row(1, L + 1)
         table_bytes = tb.nbytes + te.nbytes
     picked = m_use_fn(top)

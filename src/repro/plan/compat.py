@@ -27,6 +27,11 @@ def policy_to_request(policy: str, num_slots: Optional[int] = None,
                       impl: Optional[str] = None) -> PlanRequest:
     """The translation table: one policy string → one typed request.
 
+    ``num_slots`` and ``impl`` ride along unchanged (policy strings never
+    encoded them); ``impl`` accepts every ``dp_kernels.KNOWN_IMPLS`` value —
+    ``"banded"``, ``"pallas"`` (the Pallas band-fill kernel), or
+    ``"reference"`` — validated by :class:`PlanRequest`.
+
     =============================  ==========================================
     policy string                  PlanRequest equivalent
     =============================  ==========================================

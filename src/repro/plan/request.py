@@ -25,6 +25,7 @@ import re
 from typing import Callable, Optional, Tuple, Union
 
 from ..core.chain import Chain, HostTransferModel
+from ..core.dp_kernels import KNOWN_IMPLS
 
 #: Default slot count for the DP discretization (paper §5.2: the makespan
 #: overestimation is at most a ``1 + 1/S`` factor).  Every entry point that
@@ -164,8 +165,10 @@ class PlanRequest:
       tier is requested and this is ``None``, the chain's profiled link is
       used, falling back to the PCIe-3 x16 constant.
     - ``num_slots`` — DP discretization (``None`` → :data:`DEFAULT_NUM_SLOTS`).
-    - ``impl`` — DP kernel implementation (``"banded"``/``"reference"``;
-      ``None`` → the solver default / ``REPRO_DP_IMPL``).
+    - ``impl`` — DP kernel implementation (``"banded"``/``"pallas"``/
+      ``"reference"``, see ``repro.core.dp_kernels.KNOWN_IMPLS``; ``None`` →
+      the solver default / ``REPRO_DP_IMPL``).  ``"pallas"`` runs the band
+      fill on the Pallas kernel (jit on TPU, interpret-mode CPU fallback).
     - ``on_infeasible`` — ``"raise"`` (default: :class:`repro.plan
       .InfeasiblePlanError`) or ``"min_memory"`` (fall back to the
       smallest-memory feasible schedule and report its true need).
@@ -196,6 +199,9 @@ class PlanRequest:
             raise ValueError(
                 f"on_infeasible must be 'raise' or 'min_memory', "
                 f"got {self.on_infeasible!r}")
+        if self.impl is not None and self.impl not in KNOWN_IMPLS:
+            raise ValueError(f"unknown DP impl {self.impl!r}; "
+                             f"expected one of {KNOWN_IMPLS}")
         if self.num_slots is not None and self.num_slots < 1:
             raise ValueError("num_slots must be >= 1")
 

@@ -21,7 +21,7 @@ from ..ckpt.manager import CheckpointManager
 from ..core.rematerialize import count_checkpoint_scopes
 from ..data.pipeline import SyntheticLMData
 from ..distributed.fault_tolerance import StragglerWatchdog
-from ..distributed.sharding import DEFAULT_RULES, axis_rules, spec_for
+from ..distributed.sharding import DEFAULT_RULES, axis_rules
 from ..launch.steps import (batch_axes, make_train_step, opt_axes,
                             plan_training, shard_tree, sharding_of)
 from ..models.lm import StagedLM

@@ -1,0 +1,204 @@
+"""``impl="pallas"`` parity: the Pallas DP band-fill kernel
+(``repro.kernels.dp_fill``) must produce **band-identical** cost tables to
+the numpy banded fill (``impl="banded"``) in interpret mode, on the same
+f32-exact chains ``tests/test_dp_kernels.py`` uses (integer stage costs,
+dyadic transfer times — every DP quantity exactly representable in float32,
+so equality is bit-exact, not approximate).
+
+Interpret mode executes the kernel bodies in Python on CPU — the same
+dispatch seam ``impl="pallas"`` falls back to automatically off-TPU — so
+this suite runs in CPU CI and kernel regressions no longer need a TPU to
+surface.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dp_kernels
+from repro.core.chain import Chain, HostTransferModel
+from repro.core.schedule import Schedule, simulate
+from repro.core.solver import solve_min_memory, solve_optimal
+from repro.kernels.dp_fill import kernel as dpk
+from repro.kernels.dp_fill import ops as dpo
+from repro.kernels.dp_fill import ref as dpr
+from repro.offload.solver import solve_optimal_offload
+from repro.plan import PlanRequest, build_plan
+
+from helpers import random_chain
+
+
+@pytest.fixture(autouse=True)
+def interpret_mode():
+    dpo.set_interpret(True)
+    yield
+    dpo.set_interpret(None)
+
+
+def _dyadic_host(rng) -> HostTransferModel:
+    return HostTransferModel(
+        bandwidth_d2h=float(rng.choice([0.5, 1.0, 4.0])),
+        latency=float(rng.choice([0.0, 0.25])))
+
+
+def _budgets(ch, fracs):
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    return [float(math.ceil(peak * f)) for f in fracs]
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity vs the pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,ns,w", [(1, 1, 4), (3, 5, 17), (7, 300, 33)])
+def test_band_min_two_tier_matches_oracle(d, ns, w):
+    rng = np.random.default_rng(d * 100 + ns)
+    r = rng.uniform(0, 8, (d, ns, w)).astype(np.float32)
+    lm = rng.uniform(-4, 4, (d, ns, w)).astype(np.float32)
+    r[rng.uniform(size=r.shape) < 0.3] = np.inf   # out-of-budget sentinels
+    out = dpk.band_min_two_tier(r, lm, interpret=True)
+    exp = dpr.band_min_two_tier(r, lm)
+    assert np.array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_band_min_two_tier_row_tiling():
+    """ns above the block size exercises the padded multi-tile grid path."""
+    rng = np.random.default_rng(0)
+    r = rng.uniform(0, 8, (4, 37, 9)).astype(np.float32)
+    lm = rng.uniform(-4, 4, (4, 37, 9)).astype(np.float32)
+    out = dpk.band_min_two_tier(r, lm, block_rows=16, interpret=True)
+    exp = dpr.band_min_two_tier(r, lm)
+    assert np.array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("d,ns,w", [(1, 1, 4), (4, 23, 11)])
+def test_band_min_offload_matches_oracle(d, ns, w):
+    rng = np.random.default_rng(d * 10 + ns)
+
+    def plane(lo, hi):
+        return rng.uniform(lo, hi, (d, ns, w)).astype(np.float32)
+
+    r, r3 = plane(0, 8), plane(0, 8)
+    r[rng.uniform(size=r.shape) < 0.3] = np.inf
+    r3[rng.uniform(size=r3.shape) < 0.3] = np.inf
+    lmb, lme, lmb3 = plane(-4, 4), plane(-4, 4), plane(-4, 4)
+    toff = rng.uniform(0, 6, (ns, 1)).astype(np.float32)
+    outs = dpk.band_min_offload(r, r3, lmb, lme, lmb3, toff, interpret=True)
+    exps = dpr.band_min_offload(r, r3, lmb, lme, lmb3, toff)
+    for o, e in zip(outs, exps):
+        assert np.array_equal(np.asarray(o), np.asarray(e))
+
+
+# ---------------------------------------------------------------------------
+# band-exact table agreement with impl="banded" on f32-exact chains
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("allow_fall", [True, False])
+def test_two_tier_tables_band_exact(seed, allow_fall):
+    rng = np.random.default_rng(seed)
+    ch = random_chain(rng, max_len=5)
+    for m in _budgets(ch, (0.4, 0.7, 1.0)):
+        S = int(m)
+        dchain = ch.discretize(m, S)
+        band = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall)
+        pall = dpo.fill_two_tier(dchain, S, allow_fall=allow_fall)
+        assert np.array_equal(band.data, pall.data, equal_nan=True)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("allow_fall", [True, False])
+def test_offload_tables_band_exact(seed, allow_fall):
+    rng = np.random.default_rng(100 + seed)
+    ch = random_chain(rng, max_len=4).with_host(_dyadic_host(rng))
+    for m in _budgets(ch, (0.4, 1.0)):
+        S = int(m)
+        dchain = ch.discretize(m, S)
+        tb, te = dp_kernels.fill_offload(dchain, S, allow_fall=allow_fall)
+        pb, pe = dpo.fill_offload(dchain, S, allow_fall=allow_fall)
+        assert np.array_equal(tb.data, pb.data, equal_nan=True)
+        assert np.array_equal(te.data, pe.data, equal_nan=True)
+
+
+def test_offload_gather_path_band_exact():
+    """An activation bigger than the whole budget forces the non-sliced C3
+    gather path in both fills."""
+    ch = Chain.make(uf=[1.0, 1.0, 0.0], ub=[1.0, 1.0, 0.0],
+                    wa=[1.0, 40.0, 1.0], wabar=[2.0, 2.0, 0.0],
+                    host=HostTransferModel(bandwidth_d2h=1.0))
+    dchain = ch.discretize(8.0, 8)
+    tb, te = dp_kernels.fill_offload(dchain, 8)
+    pb, pe = dpo.fill_offload(dchain, 8)
+    assert np.array_equal(tb.data, pb.data, equal_nan=True)
+    assert np.array_equal(te.data, pe.data, equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# solver / plan surface threading
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_solutions_match_banded(seed):
+    rng = np.random.default_rng(200 + seed)
+    ch = random_chain(rng, max_len=5)
+    for m in _budgets(ch, (0.5, 1.0)):
+        S = int(m)
+        b = solve_optimal(ch, m, num_slots=S, cache=False)
+        p = solve_optimal(ch, m, num_slots=S, impl="pallas", cache=False)
+        assert b.feasible == p.feasible
+        if not b.feasible:
+            continue
+        assert b.expected_time == p.expected_time
+        res = simulate(ch, p.schedule, m + 1e-6)
+        assert res.valid, res.error
+
+
+def test_min_memory_matches_banded():
+    rng = np.random.default_rng(42)
+    ch = random_chain(rng, max_len=5)
+    b = solve_min_memory(ch, num_slots=60, cache=False)
+    p = solve_min_memory(ch, num_slots=60, impl="pallas", cache=False)
+    assert b.feasible == p.feasible
+    if b.feasible:
+        assert b.slots_used == p.slots_used
+        assert b.expected_time == p.expected_time
+
+
+def test_offload_solution_matches_banded():
+    rng = np.random.default_rng(77)
+    ch = random_chain(rng, max_len=4).with_host(_dyadic_host(rng))
+    m = _budgets(ch, (0.6,))[0]
+    S = int(m)
+    b = solve_optimal_offload(ch, m, num_slots=S, cache=False)
+    p = solve_optimal_offload(ch, m, num_slots=S, impl="pallas", cache=False)
+    assert b.feasible == p.feasible
+    if b.feasible:
+        assert b.expected_time == p.expected_time
+
+
+def test_plan_request_accepts_pallas():
+    rng = np.random.default_rng(9)
+    ch = random_chain(rng, max_len=4)
+    from repro.plan import Budget
+    plan_b = build_plan(PlanRequest(strategy="optimal",
+                                    budget=Budget.fraction(0.8),
+                                    num_slots=40), ch)
+    plan_p = build_plan(PlanRequest(strategy="optimal",
+                                    budget=Budget.fraction(0.8),
+                                    num_slots=40, impl="pallas"), ch)
+    assert plan_p.expected_time == plan_b.expected_time
+    assert plan_p.schedule.ops == plan_b.schedule.ops
+
+
+def test_plan_request_rejects_unknown_impl():
+    with pytest.raises(ValueError, match="unknown DP impl"):
+        PlanRequest(strategy="optimal", impl="cuda")
+
+
+def test_interpret_dispatch_default_is_backend_based():
+    dpo.set_interpret(None)
+    assert dpo.interpret_mode() == (jax.default_backend() != "tpu")
+    dpo.set_interpret(True)
+    assert dpo.interpret_mode() is True

@@ -169,6 +169,70 @@ def test_oversized_activation_falls_back_to_gather():
         assert b.expected_time == r.expected_time
 
 
+# ---------------------------------------------------------------------------
+# saturated m-column pruning (shared by all impls) is exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("allow_fall", [True, False])
+def test_pruned_fills_bit_equal_unpruned(seed, allow_fall):
+    """Pruning computes each band only up to its saturation frontier and
+    broadcasts the tail — the tables must stay bit-identical, for every impl
+    (the *unpruned reference* is the independent oracle here)."""
+    rng = np.random.default_rng(300 + seed)
+    ch = random_chain(rng, max_len=6)
+    for m in _budgets(ch, (0.4, 1.0)):
+        S = int(m)
+        dchain = ch.discretize(m, S)
+        ref_off = _Tables(dchain.length, S)
+        _fill_tables(dchain, ref_off, allow_fall=allow_fall, prune=False)
+        ref_on = _Tables(dchain.length, S)
+        _fill_tables(dchain, ref_on, allow_fall=allow_fall, prune=True)
+        assert np.array_equal(ref_off.C, ref_on.C, equal_nan=True)
+        off = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall,
+                                       prune=False)
+        on = dp_kernels.fill_two_tier(dchain, S, allow_fall=allow_fall,
+                                      prune=True)
+        assert np.array_equal(off.data, on.data, equal_nan=True)
+        L = dchain.length
+        for s in range(1, L + 2):
+            for t in range(s, L + 2):
+                assert np.array_equal(ref_off.C[s, t].astype(np.float32),
+                                      on.row(s, t), equal_nan=True), (s, t)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pruned_offload_fills_bit_equal_unpruned(seed):
+    rng = np.random.default_rng(400 + seed)
+    ch = random_chain(rng, max_len=5).with_host(_dyadic_host(rng))
+    for m in _budgets(ch, (0.3, 1.0)):
+        S = int(m)
+        dchain = ch.discretize(m, S)
+        ref_off = _OffloadTables(dchain.length, S)
+        _fill_tables_offload(dchain, ref_off, prune=False)
+        ref_on = _OffloadTables(dchain.length, S)
+        _fill_tables_offload(dchain, ref_on, prune=True)
+        assert np.array_equal(ref_off.Cb, ref_on.Cb, equal_nan=True)
+        assert np.array_equal(ref_off.Ce, ref_on.Ce, equal_nan=True)
+        ob, oe = dp_kernels.fill_offload(dchain, S, prune=False)
+        nb, ne = dp_kernels.fill_offload(dchain, S, prune=True)
+        assert np.array_equal(ob.data, nb.data, equal_nan=True)
+        assert np.array_equal(oe.data, ne.data, equal_nan=True)
+
+
+def test_saturation_caps_are_monotone_and_bounded():
+    rng = np.random.default_rng(5)
+    ch = random_chain(rng, max_len=6)
+    m = _budgets(ch, (0.5,))[0]
+    S = int(m)
+    dchain = ch.discretize(m, S)
+    v = dp_kernels._views(dchain)
+    caps = dp_kernels.saturation_caps(v, S)
+    assert caps.shape == (dchain.length + 1,)
+    assert (caps >= 0).all() and (caps <= S).all()
+    assert (np.diff(caps) >= 0).all()   # children always saturate first
+
+
 def test_banded_rebuild_matches_stored_costs():
     """The recomputed branch decisions reconstruct schedules whose simulated
     cost equals the banded table's top-cell value (float32)."""

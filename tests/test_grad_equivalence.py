@@ -2,7 +2,6 @@
 results* as plain autograd — for both execution paths (faithful op-sequence
 executor and the nested-remat compiler), across policies and budgets."""
 
-import math
 
 import jax
 import numpy as np

@@ -82,6 +82,39 @@ def test_rmsnorm(shape, dtype):
                                rtol=tol, atol=tol)
 
 
+def test_rmsnorm_grads():
+    """Backward parity for the custom-VJP wrapper (fwd = Pallas kernel in
+    interpret mode, bwd = recompute-from-inputs): kernel changes that skew
+    the saved residuals or the recompute surface here, on CPU CI."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (3, 17, 128))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (128,)) * 0.1 + 1
+
+    def f_k(x_, s_):
+        return (rops.rms_norm(x_, s_) ** 2).sum()
+
+    def f_r(x_, s_):
+        return (rref.rms_norm(x_, s_) ** 2).sum()
+
+    g1 = jax.grad(f_k, argnums=(0, 1))(x, s)
+    g2 = jax.grad(f_r, argnums=(0, 1))(x, s)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    key = jax.random.PRNGKey(21)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    out = fops.flash_attention(q, k, v, False)
+    exp = fref.attention(q, k, v, False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
 # -- SSD ----------------------------------------------------------------------
 
 SSD_CASES = [

@@ -5,7 +5,6 @@ saved-set peaks must track the simulator's model (the XLA-CPU buffer
 assignment cannot show this — DESIGN.md §8b — so this is the on-container
 ground truth for the memory side of the reproduction)."""
 
-import jax
 import numpy as np
 import pytest
 
