@@ -49,12 +49,15 @@ is bit-identical to the unpruned fill (tested), but small-length bands — the
 ones with the most rows — shrink to a few dozen columns.  ``REPRO_DP_PRUNE=0``
 disables pruning globally (every fill also takes an explicit ``prune=``).
 
-Three implementations share this recursion end to end (``KNOWN_IMPLS``):
+Four implementations share this recursion end to end (``KNOWN_IMPLS``):
 ``"banded"`` (this module's numpy kernels), ``"reference"`` (the seed
-per-cell float64 fill in the solvers), and ``"pallas"`` (the Pallas band-fill
-kernel package :mod:`repro.kernels.dp_fill`, dispatched lazily by
-:func:`fill_tables` / :func:`fill_tables_offload` so the numpy core never
-imports jax).
+per-cell float64 fill in the solvers), ``"pallas"`` (the per-band Pallas
+kernel of :mod:`repro.kernels.dp_fill` — host-driven band loop, one launch
+per length), and ``"pallas_fused"`` (the same package's device-resident fill:
+ONE ``pallas_call`` runs the whole recursion with in-kernel companion
+rebuild, buffers sized by the :func:`saturation_caps` band-width bound).
+The Pallas impls are dispatched lazily by :func:`fill_tables` /
+:func:`fill_tables_offload` so the numpy core never imports jax.
 """
 
 from __future__ import annotations
@@ -72,7 +75,7 @@ _F32 = np.float32
 _INF32 = np.float32(np.inf)
 
 #: The DP fill implementations every solver entry point accepts.
-KNOWN_IMPLS = ("banded", "reference", "pallas")
+KNOWN_IMPLS = ("banded", "reference", "pallas", "pallas_fused")
 
 
 def _resolve_prune(prune: Optional[bool]) -> bool:
@@ -663,14 +666,20 @@ def fill_tables(dchain, S: int, impl: str = "banded",
                 prune: Optional[bool] = None) -> BandedTable:
     """Two-tier band fill behind the ``impl`` seam: ``"banded"`` runs this
     module's numpy kernels; ``"pallas"`` dispatches (lazily, so the numpy
-    core never imports jax) to :mod:`repro.kernels.dp_fill` — the Pallas
-    band-fill kernel, jit on TPU and interpret-mode on CPU.  Both produce the
-    same :class:`BandedTable` layout, so reconstruction is impl-agnostic.
-    (``"reference"`` keeps its own table format and stays in the solvers.)"""
+    core never imports jax) to :mod:`repro.kernels.dp_fill` — the per-band
+    Pallas kernel, jit on TPU and interpret-mode on CPU; ``"pallas_fused"``
+    runs the same package's device-resident fill (one ``pallas_call`` for
+    the whole recursion).  All produce the same :class:`BandedTable` layout,
+    so reconstruction is impl-agnostic.  (``"reference"`` keeps its own
+    table format and stays in the solvers.)"""
     if impl == "pallas":
         from ..kernels.dp_fill import ops as _dp_fill_ops
         return _dp_fill_ops.fill_two_tier(dchain, S, allow_fall=allow_fall,
                                           v=v, prune=prune)
+    if impl == "pallas_fused":
+        from ..kernels.dp_fill import ops as _dp_fill_ops
+        return _dp_fill_ops.fill_two_tier_fused(
+            dchain, S, allow_fall=allow_fall, v=v, prune=prune)
     if impl != "banded":
         raise ValueError(f"fill_tables cannot run impl {impl!r}")
     return fill_two_tier(dchain, S, allow_fall=allow_fall, v=v, prune=prune)
@@ -685,6 +694,10 @@ def fill_tables_offload(dchain, S: int, impl: str = "banded",
         from ..kernels.dp_fill import ops as _dp_fill_ops
         return _dp_fill_ops.fill_offload(dchain, S, allow_fall=allow_fall,
                                          v=v, prune=prune)
+    if impl == "pallas_fused":
+        from ..kernels.dp_fill import ops as _dp_fill_ops
+        return _dp_fill_ops.fill_offload_fused(
+            dchain, S, allow_fall=allow_fall, v=v, prune=prune)
     if impl != "banded":
         raise ValueError(f"fill_tables_offload cannot run impl {impl!r}")
     return fill_offload(dchain, S, allow_fall=allow_fall, v=v, prune=prune)

@@ -6,7 +6,7 @@ input ``a^{s-1}`` and the gradient ``δ^t`` are live, with ``a^{s-1}`` *not*
 counted against ``m`` (``δ^t`` *is* counted — it appears in the
 :math:`m_\\varnothing`/:math:`m_{all}` thresholds).
 
-Three fill implementations share the recursion (``dp_kernels.KNOWN_IMPLS``):
+Four fill implementations share the recursion (``dp_kernels.KNOWN_IMPLS``):
 
 - ``impl="banded"`` (default): the length-banded, split-batched float32
   kernels of :mod:`repro.core.dp_kernels` — all starts of a sub-chain length
@@ -17,9 +17,15 @@ Three fill implementations share the recursion (``dp_kernels.KNOWN_IMPLS``):
   ``expected_time`` is recomputed in float64 by the simulator, so the
   published makespan is exact.
 - ``impl="pallas"``: the same band recursion with the split-batched min
-  reduction on the Pallas kernel of :mod:`repro.kernels.dp_fill` — jit on
-  TPU, interpret-mode CPU fallback elsewhere; band-exact against
-  ``"banded"`` (tested on f32-exact chains).
+  reduction on the per-band Pallas kernel of :mod:`repro.kernels.dp_fill` —
+  jit on TPU, interpret-mode CPU fallback elsewhere; band-exact against
+  ``"banded"`` (tested on f32-exact chains).  The band loop stays on the
+  host: O(L) kernel dispatches per fill.
+- ``impl="pallas_fused"``: the whole band recursion in ONE ``pallas_call``
+  (same package) — companion tables are rebuilt in-kernel, output bands
+  accumulate in device-resident buffers sized by the saturation-cap band
+  width, and the host touches the tables exactly twice (upload base case,
+  download result).  Also band-exact against ``"banded"``.
 - ``impl="reference"``: the original per-cell float64 fill, retained as the
   slow-but-transparent comparator (kernel-equivalence tests and benchmarks
   diff the implementations).
@@ -270,10 +276,11 @@ def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
     persistent strategy in the Automatic Differentiation model, converted to a
     valid schedule by running ``F_all`` right before each backward.
 
-    ``impl`` picks the fill kernels (``"banded"`` default, ``"pallas"`` for
-    the Pallas band-fill kernel, ``"reference"`` for the seed float64 path;
-    env ``REPRO_DP_IMPL`` overrides the default).  ``cache=False`` bypasses
-    the solver cache (used by benchmarks).
+    ``impl`` picks the fill kernels (``"banded"`` default, ``"pallas"`` /
+    ``"pallas_fused"`` for the per-band / single-dispatch Pallas kernels,
+    ``"reference"`` for the seed float64 path; env ``REPRO_DP_IMPL``
+    overrides the default).  ``cache=False`` bypasses the solver cache
+    (used by benchmarks).
     """
     impl = _resolve_impl(impl)
     dchain = chain.discretize(mem_limit, num_slots)

@@ -52,6 +52,12 @@ _FALSEY = {"0", "off", "false", "no"}
 _FINGERPRINT_MODULES = ("repro.core.chain", "repro.core.schedule",
                         "repro.core.dp_kernels", "repro.core.solver",
                         "repro.offload.solver")
+# the Pallas kernel package is fingerprinted too (its fills produce cached
+# Solutions under impl="pallas"/"pallas_fused") — by file path relative to
+# the repro package, NOT by import, so fingerprinting never drags jax into
+# the numpy core (importing, or even find_spec-ing, a dp_fill submodule
+# would execute the package __init__, which imports jax)
+_FINGERPRINT_FILES = ("kernels/dp_fill/kernel.py", "kernels/dp_fill/ops.py")
 _code_fingerprint: Optional[str] = None
 
 
@@ -68,6 +74,13 @@ def code_fingerprint() -> str:
                     h.update(f.read())
             except Exception:
                 h.update(name.encode())  # missing module: still deterministic
+        pkg_root = Path(__file__).resolve().parent.parent  # src/repro/
+        for rel in _FINGERPRINT_FILES:
+            try:
+                with open(pkg_root / rel, "rb") as f:
+                    h.update(f.read())
+            except Exception:
+                h.update(rel.encode())  # missing file: still deterministic
         _code_fingerprint = h.hexdigest()
     return _code_fingerprint
 

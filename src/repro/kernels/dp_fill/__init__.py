@@ -1,1 +1,1 @@
-from . import ops, ref
+from . import autotune, ops, ref

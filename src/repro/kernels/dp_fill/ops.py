@@ -1,15 +1,26 @@
-"""Band-fill drivers for ``impl="pallas"`` — the solver-side dispatch seam.
+"""Band-fill drivers for ``impl="pallas"`` / ``impl="pallas_fused"`` — the
+solver-side dispatch seam.
 
 These mirror the numpy banded fills of :mod:`repro.core.dp_kernels` exactly
 (same companion tables, same thresholds, same saturated m-column pruning,
-same C2 fall plane) but hand the per-band split reduction — the DP's
-O(L·band) hot loop — to the Pallas kernels in :mod:`.kernel`.  The band
-recursion itself stays on the host: companion tables are republished after
-each band, one kernel launch per length.
+same C2 fall plane) but hand the DP's hot loop to the Pallas kernels in
+:mod:`.kernel`:
+
+- ``fill_two_tier`` / ``fill_offload`` (``impl="pallas"``) keep the band
+  recursion on the host — companion tables are republished after each band,
+  one kernel launch per length (O(L) dispatches per fill);
+- ``fill_two_tier_fused`` / ``fill_offload_fused`` (``impl="pallas_fused"``)
+  stage the *whole* recursion as ONE ``pallas_call``: the host builds the
+  base case, thresholds, and clamped integer operands, dispatches once, and
+  unpacks the returned table(s) — companion rebuild happens in-kernel, and
+  the device buffers are sized by the ``O(cap_d)`` saturation bound (the
+  widest unsaturated band), with the saturated tail broadcast on the host
+  after the fact.  ``block_rows`` (the row-tile height) resolves through
+  :mod:`.autotune` when not given.
 
 Dispatch seam: on a TPU backend the kernels run jitted; everywhere else they
-fall back to Pallas interpret mode automatically, so ``impl="pallas"`` is
-runnable (slowly) in CPU CI — that is what the parity suite
+fall back to Pallas interpret mode automatically, so both impls are runnable
+(slowly) in CPU CI — that is what the parity suite
 ``tests/test_dp_fill_pallas.py`` exercises.  ``set_interpret`` overrides the
 automatic choice, matching the other kernel packages.
 """
@@ -215,4 +226,155 @@ def fill_offload(dchain, S: int, allow_fall: bool = True,
         _build_lm_band(ctx, Lme, te, d)
         if host_on:
             build_lmb3(d)
+    return tb, te
+
+
+# ---------------------------------------------------------------------------
+# Fused single-dispatch fills (impl="pallas_fused")
+# ---------------------------------------------------------------------------
+
+_ICLAMP = kernel._INT_CLAMP
+
+
+class _FusedOperands:
+    """Host-side staging for the fused kernels: the padded initial table,
+    the band offsets, the clamped integer vectors, and the per-band
+    thresholds — everything the recursion needs, computed before the single
+    dispatch.
+
+    Row padding: every in-kernel tile is a *static*-height dynamic slice, so
+    the padded lanes of small bands read/write rows past the band.  Those
+    rows always belong to later bands (or to this pad margin) and are
+    rewritten by their own band's step before any read, so garbage there is
+    harmless — the pad only has to keep the slices in bounds:
+    ``2L + block_rows`` rows cover the deepest read
+    (``off[d-1-j] + 1 + j + row_tiles·BR``).
+
+    Width: ``W`` is the widest unsaturated band
+    (:func:`repro.core.dp_kernels.band_width` at ``d = L`` — the caps are
+    monotone), i.e. the ``O(cap_d)`` VMEM sizing bound.  Columns the banded
+    fill would broadcast are computed directly in-kernel; by the saturation
+    invariant the values are bit-identical, so the host-side unpack can
+    broadcast the ``[W, S]`` tail from column ``W - 1``.
+    """
+
+    def __init__(self, ctx, caps, BR: int):
+        L, S = ctx.L, ctx.S
+        self.L, self.S = L, S
+        self.W = dp_kernels.band_width(caps, L, S)
+        sizes = np.array([L + 1 - d for d in range(L + 1)], dtype=np.int64)
+        off = np.concatenate([[0], np.cumsum(sizes)])
+        self.ncells = int(off[-1])
+        self.nrows = self.ncells + 2 * L + BR
+        self.off = off.astype(np.int32)
+        vec = 2 * L + BR + 2
+
+        def pad_to(a, n, fill=0):
+            out = np.full(n, fill, dtype=a.dtype)
+            out[: len(a)] = a
+            return out
+
+        self.wa = pad_to(np.clip(ctx.WA, 0, _ICLAMP).astype(np.int32), vec)
+        self.wb = pad_to(np.clip(ctx.WB, 0, _ICLAMP).astype(np.int32), vec)
+        self.cum = pad_to(ctx.CUM32, vec)
+        self.uf = pad_to(ctx.UF32, vec)
+        self.ub = pad_to(ctx.UB32, vec)
+        rt = -(-max(L, 1) // BR)
+        self.mn = np.zeros((max(L, 1), rt * BR), dtype=np.int32)
+        self.ma = np.zeros((max(L, 1), rt * BR), dtype=np.int32)
+        for d in range(1, L + 1):
+            ma_d, mn_d = ctx.thresholds(d)
+            ns = L + 1 - d
+            self.mn[d - 1, :ns] = np.clip(mn_d, 0, _ICLAMP)
+            self.ma[d - 1, :ns] = np.clip(ma_d, 0, _ICLAMP)
+        self.vec = vec
+
+    def initial_table(self, tab: BandedTable) -> np.ndarray:
+        t0 = np.full((self.nrows, self.W), INFEASIBLE, dtype=COST_DTYPE)
+        t0[: self.ncells] = tab.data[:, 1 : 1 + self.W]
+        return t0
+
+    def unpack(self, dev, tab: BandedTable) -> BandedTable:
+        W, S = self.W, self.S
+        tab.data[:, 1 : 1 + W] = np.asarray(dev)[: self.ncells]
+        if W <= S:
+            tab.data[:, 1 + W :] = tab.data[:, W : W + 1]  # saturated tail
+        return tab
+
+
+def _resolve_block_rows(block_rows, L: int, S: int, interpret: bool) -> int:
+    if block_rows is not None:
+        return int(block_rows)
+    from . import autotune
+    return autotune.resolve_block_rows(L, S, interpret=interpret)
+
+
+def fill_two_tier_fused(dchain, S: int, allow_fall: bool = True,
+                        v: Optional[dict] = None, prune: Optional[bool] = None,
+                        block_rows: Optional[int] = None) -> BandedTable:
+    """Two-tier band fill in ONE device dispatch: the entire band recursion
+    (split reduction, thresholds, C2 fall plane, companion rebuild) runs
+    inside a single ``pallas_call`` — no per-band host loop.  Band-exact
+    against :func:`repro.core.dp_kernels.fill_two_tier` on f32-exact
+    chains."""
+    if v is None:
+        v = _views(dchain)
+    L = dchain.length
+    ctx = _FillCtx(v, L, S)
+    tab = BandedTable(L, S)
+    ctx.base_case(tab)
+    if L == 0:
+        return tab
+    caps = (dp_kernels.saturation_caps(v, S, allow_fall)
+            if dp_kernels._resolve_prune(prune) else None)
+    interpret = interpret_mode()
+    BR = max(1, min(_resolve_block_rows(block_rows, L, S, interpret), L))
+    ops_ = _FusedOperands(ctx, caps, BR)
+    dev = kernel.fused_fill_two_tier(
+        ops_.initial_table(tab), ops_.off, ops_.wa, ops_.wb, ops_.cum,
+        ops_.uf, ops_.ub, ops_.mn, ops_.ma, L=L, W=ops_.W, block_rows=BR,
+        allow_fall=allow_fall, interpret=interpret)
+    return ops_.unpack(dev, tab)
+
+
+def fill_offload_fused(dchain, S: int, allow_fall: bool = True,
+                       v: Optional[dict] = None, prune: Optional[bool] = None,
+                       block_rows: Optional[int] = None
+                       ) -> Tuple[BandedTable, BandedTable]:
+    """Offload (three-tier) band fill in ONE device dispatch: both cost
+    tables and all four companion buffers stay device-resident across the
+    whole recursion, the C3 stall folded to ``max(X, T_off)`` in-kernel."""
+    if v is None:
+        v = _views(dchain)
+    L = dchain.length
+    ctx = _FillCtx(v, L, S)
+    tb, te = BandedTable(L, S), BandedTable(L, S)
+    ctx.base_case(tb)
+    ctx.base_case(te)
+    if L == 0:
+        return tb, te
+    caps = (dp_kernels.saturation_caps(v, S, allow_fall)
+            if dp_kernels._resolve_prune(prune) else None)
+    interpret = interpret_mode()
+    BR = max(1, min(_resolve_block_rows(block_rows, L, S, interpret), L))
+    ops_ = _FusedOperands(ctx, caps, BR)
+    host = dchain.chain.host
+    host_on = host is not None and host.enabled
+    if host_on:
+        toff = (dchain.chain.offload_times()
+                + np.asarray(v["CUM_UF"][:L + 1])).astype(COST_DTYPE)
+        tpre = dchain.chain.prefetch_times().astype(COST_DTYPE)
+    else:
+        toff = np.zeros(L + 1, dtype=COST_DTYPE)
+        tpre = np.zeros(L + 1, dtype=COST_DTYPE)
+    pad = np.zeros(ops_.vec, dtype=COST_DTYPE)
+    toff_p, tpre_p = pad.copy(), pad.copy()
+    toff_p[: L + 1], tpre_p[: L + 1] = toff, tpre
+    devb, deve = kernel.fused_fill_offload(
+        ops_.initial_table(tb), ops_.initial_table(te), ops_.off, ops_.wa,
+        ops_.wb, ops_.cum, ops_.uf, ops_.ub, ops_.mn, ops_.ma, toff_p,
+        tpre_p, L=L, W=ops_.W, block_rows=BR, allow_fall=allow_fall,
+        host_on=host_on, interpret=interpret)
+    ops_.unpack(devb, tb)
+    ops_.unpack(deve, te)
     return tb, te

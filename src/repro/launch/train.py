@@ -42,9 +42,10 @@ def main(argv=None) -> int:
     ap.add_argument("--num-slots", type=int, default=None,
                     help="DP discretization slots (default: plan default)")
     ap.add_argument("--solver-impl", default=None,
-                    choices=("banded", "pallas", "reference"),
-                    help="DP fill kernels: banded numpy, the Pallas band-fill"
-                         " kernel (jit on TPU, interpret on CPU), or the seed"
+                    choices=("banded", "pallas", "pallas_fused", "reference"),
+                    help="DP fill kernels: banded numpy, the per-band Pallas"
+                         " kernel, the fused single-dispatch Pallas fill"
+                         " (both jit on TPU, interpret on CPU), or the seed"
                          " float64 path (default: banded / REPRO_DP_IMPL)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)

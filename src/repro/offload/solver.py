@@ -30,8 +30,13 @@ simply delegates to ``core.solver.solve_optimal``.
 
 Like the two-tier solver, the fill runs on the banded split-batched kernels
 of :mod:`repro.core.dp_kernels` by default (the C3 branch is one more batched
-candidate plane; ``impl="reference"`` keeps the seed per-cell float64 path),
-and results are memoized through :mod:`repro.core.solver_cache`.
+candidate plane; ``impl="reference"`` keeps the seed per-cell float64 path).
+``impl="pallas"`` stages the same recursion on the per-band Pallas kernel
+(three accumulators per pass, C3 stall pre-folded to ``max(X, T_off)``) and
+``impl="pallas_fused"`` runs it as ONE ``pallas_call`` with both cost tables
+and all four companion buffers device-resident — see
+:mod:`repro.kernels.dp_fill`.  Results are memoized through
+:mod:`repro.core.solver_cache`.
 """
 
 from __future__ import annotations

@@ -29,7 +29,8 @@ def policy_to_request(policy: str, num_slots: Optional[int] = None,
 
     ``num_slots`` and ``impl`` ride along unchanged (policy strings never
     encoded them); ``impl`` accepts every ``dp_kernels.KNOWN_IMPLS`` value —
-    ``"banded"``, ``"pallas"`` (the Pallas band-fill kernel), or
+    ``"banded"``, ``"pallas"`` (the per-band Pallas kernel),
+    ``"pallas_fused"`` (the single-dispatch device-resident fill), or
     ``"reference"`` — validated by :class:`PlanRequest`.
 
     =============================  ==========================================

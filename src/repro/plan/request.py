@@ -166,9 +166,11 @@ class PlanRequest:
       used, falling back to the PCIe-3 x16 constant.
     - ``num_slots`` — DP discretization (``None`` → :data:`DEFAULT_NUM_SLOTS`).
     - ``impl`` — DP kernel implementation (``"banded"``/``"pallas"``/
-      ``"reference"``, see ``repro.core.dp_kernels.KNOWN_IMPLS``; ``None`` →
-      the solver default / ``REPRO_DP_IMPL``).  ``"pallas"`` runs the band
-      fill on the Pallas kernel (jit on TPU, interpret-mode CPU fallback).
+      ``"pallas_fused"``/``"reference"``, see
+      ``repro.core.dp_kernels.KNOWN_IMPLS``; ``None`` → the solver default /
+      ``REPRO_DP_IMPL``).  ``"pallas"`` runs the band fill on the per-band
+      Pallas kernel, ``"pallas_fused"`` on the single-dispatch
+      device-resident fill (both jit on TPU, interpret-mode CPU fallback).
     - ``on_infeasible`` — ``"raise"`` (default: :class:`repro.plan
       .InfeasiblePlanError`) or ``"min_memory"`` (fall back to the
       smallest-memory feasible schedule and report its true need).

@@ -71,7 +71,7 @@ class TrainLoopConfig:
     log_every: int = 10
     policy: Optional[str] = None        # remat policy override
     num_slots: Optional[int] = None     # DP discretization (None = plan default)
-    solver_impl: Optional[str] = None   # DP kernels ("banded"/"reference")
+    solver_impl: Optional[str] = None   # DP kernels (dp_kernels.KNOWN_IMPLS)
     grad_accum: int = 1                 # microbatch accumulation factor
     straggler_threshold: float = 3.0
     data_host_count: int = 1
