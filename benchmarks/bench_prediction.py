@@ -1,5 +1,12 @@
 """Paper §5.3: accuracy of the cost model — predicted vs measured throughput
-(paper: 7.8% MAPE) across strategies/budgets on the CPU chains."""
+(paper: 7.8% MAPE) across strategies/budgets on the CPU chains.
+
+``drift_section`` is the observability counterpart: execute one plan with
+the span tracer, compare predicted vs measured (``repro.obs.drift``), feed
+the measured per-stage times back through ``Chain.calibrate``, re-plan, and
+re-measure — the number that matters is how much one calibration pass
+shrinks the makespan prediction error.  ``benchmarks/bench_solver.py``
+embeds the result as ``BENCH_solver.json``'s ``prediction`` section."""
 
 from __future__ import annotations
 
@@ -7,6 +14,70 @@ import numpy as np
 
 from .bench_tradeoff import run_chain
 from .chains import resnet_ish_chain
+
+
+def _measure_traced(plan, stages, params, x):
+    """Warm, then trace one execution of ``plan``.  The warm-up run pays the
+    one-time jit/vjp tracing of each stage so the recorded spans are
+    steady-state compute, not compilation."""
+    from repro.obs.trace import Tracer
+
+    plan.execute(stages, params, x)
+    tracer = Tracer(name="bench_prediction")
+    plan.execute(stages, params, x, tracer=tracer)
+    return tracer
+
+
+def drift_section(emit=print, small: bool = True):
+    """One calibration pass of the drift loop on a tiny conv chain; returns
+    the machine-readable record for ``BENCH_solver.json``."""
+    from repro.core import profile_stages_measured
+    from repro.obs.drift import calibrate_from_trace, compare
+    from repro.plan import Budget, PlanRequest, build_plan
+
+    stages, params, x = resnet_ish_chain(num_blocks=4,
+                                         image=32 if small else 64,
+                                         batch=4 if small else 8,
+                                         base_ch=16)
+    chain = profile_stages_measured(stages, params, x, repeats=2)
+    req = PlanRequest(strategy="optimal", budget=Budget.fraction(0.6),
+                      num_slots=200)
+    plan = build_plan(req, chain)
+
+    trace = _measure_traced(plan, stages, params, x)
+    before = compare(plan, trace)
+
+    calibrated = calibrate_from_trace(chain, trace)
+    plan2 = build_plan(req, calibrated)
+    trace2 = _measure_traced(plan2, stages, params, x)
+    after = compare(plan2, trace2)
+
+    rec = {
+        "chain": "resnet_ish(4 blocks)",
+        "spans_per_execution": len(trace.spans),
+        "before": {"predicted_s": before.predicted_makespan,
+                   "measured_s": before.measured_makespan,
+                   "makespan_ratio": before.makespan_ratio,
+                   "layer_mape_percent": before.layer_mape},
+        "after": {"predicted_s": after.predicted_makespan,
+                  "measured_s": after.measured_makespan,
+                  "makespan_ratio": after.makespan_ratio,
+                  "layer_mape_percent": after.layer_mape},
+    }
+    err_before = abs(before.makespan_ratio - 1.0)
+    err_after = abs(after.makespan_ratio - 1.0)
+    rec["error_before"] = err_before
+    rec["error_after"] = err_after
+    emit("phase,predicted_s,measured_s,makespan_ratio,layer_mape_percent")
+    emit(f"before,{before.predicted_makespan:.4f},"
+         f"{before.measured_makespan:.4f},{before.makespan_ratio:.3f},"
+         f"{before.layer_mape:.1f}")
+    emit(f"after,{after.predicted_makespan:.4f},"
+         f"{after.measured_makespan:.4f},{after.makespan_ratio:.3f},"
+         f"{after.layer_mape:.1f}")
+    emit(f"# one Chain.calibrate pass: |ratio-1| {err_before:.3f} -> "
+         f"{err_after:.3f}")
+    return rec
 
 
 def main(emit=print, small: bool = True):

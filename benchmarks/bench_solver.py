@@ -237,14 +237,21 @@ def write_json(result: dict, path: str = JSON_PATH) -> None:
 
 
 def main(emit=print, small: bool = True):
+    from .bench_prediction import drift_section
+
     if small:
-        return run(lengths=(20, 50, 100), num_slots=200, emit=emit)
+        result = run(lengths=(20, 50, 100), num_slots=200, emit=emit)
+        emit("# prediction drift section (repro.obs trace -> calibrate):")
+        result["prediction"] = drift_section(emit=emit, small=True)
+        return result
     result = run(emit=emit)
     # Embed the CI-sized run too: the bench-trajectory job replays exactly
     # `--small` on the runner and diffs its rows against this section of the
     # committed baseline (same lengths, same slot count — comparable rows).
     emit("# small (CI bench-trajectory baseline) rows:")
     result["small"] = run(lengths=(20, 50, 100), num_slots=200, emit=emit)
+    emit("# prediction drift section (repro.obs trace -> calibrate):")
+    result["prediction"] = drift_section(emit=emit, small=True)
     return result
 
 

@@ -66,3 +66,24 @@ g_ref = jax.jit(jax.grad(plain))(params, x)
 err = max(float(jnp.max(jnp.abs(a - b)))
           for a, b in zip(jax.tree.leaves(g_rotor), jax.tree.leaves(g_ref)))
 print(f"max |grad_rotor - grad_plain| = {err:.2e}  (exactly the same results)")
+
+# 6) observability (opt-in): set REPRO_OBS_OUT=<dir> to execute the plan once
+#    with the span tracer and drop trace.json (load at ui.perfetto.dev) + a
+#    metrics snapshot + the plan-vs-actual drift report there
+obs_out = os.environ.get("REPRO_OBS_OUT")
+if obs_out:
+    import json
+
+    from repro.obs import metrics
+    from repro.obs.trace import Tracer
+
+    os.makedirs(obs_out, exist_ok=True)
+    tracer = Tracer(name="quickstart")
+    plan.execute(stages, params, x, tracer=tracer)
+    tracer.save(os.path.join(obs_out, "trace.json"))
+    metrics.save(os.path.join(obs_out, "metrics.json"))
+    report = plan.drift(tracer)
+    with open(os.path.join(obs_out, "drift.json"), "w") as f:
+        json.dump(report.to_json(), f, indent=1)
+    print(f"[obs] wrote trace.json / metrics.json / drift.json to {obs_out}")
+    print(report.summary())

@@ -69,6 +69,8 @@ from typing import Optional, Tuple
 import numpy as np
 from numpy.lib.stride_tricks import sliding_window_view
 
+from ..obs import metrics as _obs
+
 INFEASIBLE = np.inf
 COST_DTYPE = np.float32
 _F32 = np.float32
@@ -671,36 +673,44 @@ def fill_tables(dchain, S: int, impl: str = "banded",
     runs the same package's device-resident fill (one ``pallas_call`` for
     the whole recursion).  All produce the same :class:`BandedTable` layout,
     so reconstruction is impl-agnostic.  (``"reference"`` keeps its own
-    table format and stays in the solvers.)"""
-    if impl == "pallas":
-        from ..kernels.dp_fill import ops as _dp_fill_ops
-        return _dp_fill_ops.fill_two_tier(dchain, S, allow_fall=allow_fall,
-                                          v=v, prune=prune)
-    if impl == "pallas_fused":
-        from ..kernels.dp_fill import ops as _dp_fill_ops
-        return _dp_fill_ops.fill_two_tier_fused(
-            dchain, S, allow_fall=allow_fall, v=v, prune=prune)
-    if impl != "banded":
-        raise ValueError(f"fill_tables cannot run impl {impl!r}")
-    return fill_two_tier(dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+    table format and stays in the solvers.)
+
+    Fill wall time lands in the ``dp_fill.<impl>.seconds`` histogram of the
+    process metrics registry (:mod:`repro.obs.metrics`)."""
+    with _obs.histogram(f"dp_fill.{impl}.seconds").time():
+        if impl == "pallas":
+            from ..kernels.dp_fill import ops as _dp_fill_ops
+            return _dp_fill_ops.fill_two_tier(
+                dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+        if impl == "pallas_fused":
+            from ..kernels.dp_fill import ops as _dp_fill_ops
+            return _dp_fill_ops.fill_two_tier_fused(
+                dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+        if impl != "banded":
+            raise ValueError(f"fill_tables cannot run impl {impl!r}")
+        return fill_two_tier(dchain, S, allow_fall=allow_fall, v=v,
+                             prune=prune)
 
 
 def fill_tables_offload(dchain, S: int, impl: str = "banded",
                         allow_fall: bool = True, v: Optional[dict] = None,
                         prune: Optional[bool] = None
                         ) -> Tuple[BandedTable, BandedTable]:
-    """Offload (three-tier) band fill behind the same ``impl`` seam."""
-    if impl == "pallas":
-        from ..kernels.dp_fill import ops as _dp_fill_ops
-        return _dp_fill_ops.fill_offload(dchain, S, allow_fall=allow_fall,
-                                         v=v, prune=prune)
-    if impl == "pallas_fused":
-        from ..kernels.dp_fill import ops as _dp_fill_ops
-        return _dp_fill_ops.fill_offload_fused(
-            dchain, S, allow_fall=allow_fall, v=v, prune=prune)
-    if impl != "banded":
-        raise ValueError(f"fill_tables_offload cannot run impl {impl!r}")
-    return fill_offload(dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+    """Offload (three-tier) band fill behind the same ``impl`` seam; wall
+    time lands in the ``dp_fill.<impl>.offload_seconds`` histogram."""
+    with _obs.histogram(f"dp_fill.{impl}.offload_seconds").time():
+        if impl == "pallas":
+            from ..kernels.dp_fill import ops as _dp_fill_ops
+            return _dp_fill_ops.fill_offload(
+                dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+        if impl == "pallas_fused":
+            from ..kernels.dp_fill import ops as _dp_fill_ops
+            return _dp_fill_ops.fill_offload_fused(
+                dchain, S, allow_fall=allow_fall, v=v, prune=prune)
+        if impl != "banded":
+            raise ValueError(f"fill_tables_offload cannot run impl {impl!r}")
+        return fill_offload(dchain, S, allow_fall=allow_fall, v=v,
+                            prune=prune)
 
 
 # ---------------------------------------------------------------------------

@@ -33,12 +33,17 @@ def execute_schedule(
     x: Any,
     loss_cotangent: Any = None,
     track_live_bytes: bool = False,
+    tracer=None,
 ) -> Tuple[Any, List[Any], Any]:
     """Run forward+backward per ``schedule``.
 
     Returns ``(loss_output, param_grads, input_grad)``. ``stages[l-1]`` maps
     paper stage ``l``; the last stage must produce the loss (a scalar) unless
     ``loss_cotangent`` is supplied.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`, opt-in) records one span
+    per executed op — the measured timeline that
+    :func:`repro.obs.drift.compare` holds against the plan's predicted one.
 
     With ``track_live_bytes=True`` additionally returns a 4th element: the
     **empirical** peak of the executor's saved-set in bytes (activations,
@@ -54,7 +59,7 @@ def execute_schedule(
     from ..offload.executor import execute_offload_schedule
     return execute_offload_schedule(
         schedule, stages, params, x, loss_cotangent=loss_cotangent,
-        track_live_bytes=track_live_bytes)
+        track_live_bytes=track_live_bytes, tracer=tracer)
 
 
 def reference_grads(stages: Sequence[Callable], params: Sequence[Any], x: Any

@@ -57,6 +57,7 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 
 from . import dp_kernels, solver_cache
+from ..obs import metrics as _obs
 from .chain import Chain
 from .dp_kernels import (INFEASIBLE, _m_all, _m_none, _shift,  # noqa: F401
                          _views)
@@ -291,7 +292,8 @@ def solve_optimal(chain: Chain, mem_limit: float, num_slots: int = 500,
         v = _views(dchain)
         if impl == "reference":
             tables = _Tables(L, S)
-            _fill_tables(dchain, tables, allow_fall=allow_fall)
+            with _obs.histogram("dp_fill.reference.seconds").time():
+                _fill_tables(dchain, tables, allow_fall=allow_fall)
             if m_top < 0 or not np.isfinite(tables.C[1, L + 1, m_top]):
                 return Solution(False, INFEASIBLE, None, None, mem_limit,
                                 num_slots, max(m_top, 0), tables.nbytes)
@@ -329,7 +331,8 @@ def solve_min_memory(chain: Chain, num_slots: int = 500,
         v = _views(dchain)
         if impl == "reference":
             tables = _Tables(L, S)
-            _fill_tables(dchain, tables, allow_fall=allow_fall)
+            with _obs.histogram("dp_fill.reference.seconds").time():
+                _fill_tables(dchain, tables, allow_fall=allow_fall)
             top = tables.C[1, L + 1]
             table_bytes = tables.nbytes
             rebuild_fn = lambda m: _rebuild(v, tables, 1, L + 1, m)  # noqa: E731

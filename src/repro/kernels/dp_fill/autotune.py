@@ -149,6 +149,8 @@ def autotune_block_rows(
     most once per ``(bucket, dispatch-mode)`` and persisted via the solver
     cache's disk store.  A corrupted or stale persisted entry recalibrates
     (and is overwritten), mirroring :mod:`repro.core.solver_cache`."""
+    from ...obs import metrics as _obs
+
     sc = solver_cache.get_cache()
     key = cache_key(L, S, interpret)
     if cache:
@@ -158,12 +160,16 @@ def autotune_block_rows(
             entry = sc.get(key)
             if _valid_entry(entry):
                 _memo[key] = entry["block_rows"]
+                _obs.counter("dp_autotune.cache_hits").inc()
+                _obs.gauge("dp_autotune.block_rows").set(entry["block_rows"])
                 return entry["block_rows"]
     result = measure(L, S, interpret, candidates=candidates)
     if cache:
         _memo[key] = result["block_rows"]
         if sc.enabled:
             sc.put(key, result)
+    _obs.counter("dp_autotune.calibrations").inc()
+    _obs.gauge("dp_autotune.block_rows").set(result["block_rows"])
     return result["block_rows"]
 
 

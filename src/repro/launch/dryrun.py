@@ -128,6 +128,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "plan": (extra["plan"].stats() if extra.get("plan") is not None
                  else None),
     }
+    # process-wide observability counters accumulated while planning and
+    # compiling this cell (solver cache traffic, DP fill wall times, ...)
+    from ..obs import metrics as _obs_metrics
+    rec["metrics"] = _obs_metrics.snapshot()
     if extra.get("tree") is not None:
         from ..core.rematerialize import count_checkpoint_scopes
         rec["rotor"] = {"ck_scopes": count_checkpoint_scopes(extra["tree"])}

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.schedule import BWD, F_ALL, F_CK, F_NONE, F_OFF, PREFETCH, Schedule
+from ..obs import metrics
+from ..obs.trace import Tracer
 from .host_buffer import HostBuffer
 
 
@@ -75,6 +77,7 @@ def execute_offload_schedule(
     host_buffer: Optional[HostBuffer] = None,
     host_device=None,
     device=None,
+    tracer: Optional[Tracer] = None,
 ) -> Tuple[Any, List[Any], Any]:
     """Run forward+backward per an offload-bearing ``schedule``.
 
@@ -83,6 +86,13 @@ def execute_offload_schedule(
     ``track_live_bytes=True``, the empirical peak of the *device-side*
     saved-set in bytes.  Host-side bytes are accounted by ``host_buffer``
     (``host_buffer.peak_bytes`` after the run).
+
+    ``tracer`` (opt-in) records one :class:`~repro.obs.trace.Span` per op —
+    kind, op index, bytes produced/moved, wall time — fencing each op with
+    ``jax.block_until_ready`` when ``tracer.sync`` so spans cover real
+    device work; the untraced path is untouched.  Prefetch wall time (the
+    schedule's synchronous stall) also lands in the
+    ``offload.prefetch_stall_seconds`` metric.
     """
     L = schedule.length
     if host_buffer is None:
@@ -107,19 +117,30 @@ def execute_offload_schedule(
             return outs[i]
         raise RuntimeError(f"a^{i} not available — invalid schedule")
 
+    rec = tracer is not None and tracer.enabled
     for kind, l in schedule.ops:
+        if rec:
+            t0 = tracer.now()
+            produced = None     # value fenced before the span closes
+            moved: Optional[int] = None
         if kind == F_OFF:
             i = int(l)
             if i not in acts:
                 raise RuntimeError(
                     f"Foff: a^{i} not live as a bare activation")
             host_copy = _to_host(acts[i], host_device)
-            host_buffer.put(i, host_copy, nbytes=_tree_bytes(host_copy))
+            nbytes = _tree_bytes(host_copy)
+            host_buffer.put(i, host_copy, nbytes=nbytes)
+            if rec:
+                produced, moved = host_copy, nbytes
         elif kind == PREFETCH:
             i = int(l)
             if i in acts:
                 raise RuntimeError(f"Prefetch: a^{i} already on device")
             acts[i] = _to_device(host_buffer.pop(i), device, donate=True)
+            if rec:
+                produced = acts[i]
+                moved = _tree_bytes(produced)
         elif kind in (F_NONE, F_CK, F_ALL):
             a_in = get_act(l - 1)
             if kind == F_ALL:
@@ -135,6 +156,9 @@ def execute_offload_schedule(
                     final_out = out
             if kind == F_NONE:
                 acts.pop(l - 1, None)
+            if rec:
+                produced = out
+                moved = _tree_bytes(out)
         elif kind == BWD:
             if l == L + 1:
                 out = outs[l]
@@ -150,12 +174,27 @@ def execute_offload_schedule(
                 jnp.add, grads[l - 1], dparams)
             deltas[l - 1] = da
             acts.pop(l - 1, None)  # B^l consumes a^{l-1}
+            if rec:
+                produced = (dparams, da)
         else:
             raise ValueError(f"offload executor cannot run op kind {kind}")
+        live = None
         if track_live_bytes:
             live = (_tree_bytes(acts) + _tree_bytes(vjps) + _tree_bytes(outs)
                     + _tree_bytes(deltas))
             peak_live = max(peak_live, live)
+        if rec:
+            tracer.fence(produced)
+            t1 = tracer.now()
+            tracer.record(kind, int(l), t0, t1, bytes=moved,
+                          host_mem=(float(host_buffer.bytes_in_use)
+                                    if kind in (F_OFF, PREFETCH) else None),
+                          device_mem=(float(live) if live is not None
+                                      else None))
+            if kind == PREFETCH:
+                # the prefetch is synchronous: its whole wall time is stall
+                metrics.histogram(
+                    "offload.prefetch_stall_seconds").observe(t1 - t0)
 
     if 0 not in deltas:
         raise RuntimeError("schedule did not produce δ^0")

@@ -19,6 +19,8 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Callable, List, Optional
 
+from ..obs import metrics as _metrics
+
 
 @dataclasses.dataclass
 class HostBufferStats:
@@ -107,6 +109,9 @@ class HostBuffer:
         self._entries[key] = (value, size)
         self._bytes += size
         self.stats.peak_bytes = max(self.stats.peak_bytes, self._bytes)
+        if evicted:
+            _metrics.counter("host_buffer.evictions").inc(len(evicted))
+        self._publish()
         return evicted
 
     def get(self, key, default=None):
@@ -125,8 +130,15 @@ class HostBuffer:
             raise KeyError(f"host buffer: no entry {key!r}")
         value, size = self._entries.pop(key)
         self._bytes -= size
+        self._publish()
         return value
 
     def clear(self) -> None:
         self._entries.clear()
         self._bytes = 0
+        self._publish()
+
+    def _publish(self) -> None:
+        """Mirror pin-pool occupancy into the process metrics registry (the
+        gauge's ``max`` is the cross-buffer occupancy high-water mark)."""
+        _metrics.gauge("host_buffer.bytes_in_use").set(self._bytes)

@@ -48,6 +48,7 @@ import numpy as np
 
 from ..core import dp_kernels, solver_cache
 from ..core.chain import Chain
+from ..obs import metrics as _obs
 from ..core.schedule import (BWD, F_ALL, F_CK, F_NONE, F_OFF, PREFETCH,
                              Schedule, simulate)
 from ..core.solver import (INFEASIBLE, AllNode, CkNode, Leaf, Solution,
@@ -325,7 +326,8 @@ def _solve_offload(chain: Chain, dchain, mem_limit: float, num_slots: int,
     v = _views(dchain)
     if impl == "reference":
         tables = _OffloadTables(L, S)
-        _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
+        with _obs.histogram("dp_fill.reference.offload_seconds").time():
+            _fill_tables_offload(dchain, tables, allow_fall=allow_fall)
         top = tables.Cb[1, L + 1]
         table_bytes = tables.nbytes
     else:

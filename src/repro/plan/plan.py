@@ -166,19 +166,35 @@ class MemoryPlan:
     # -- execution ---------------------------------------------------------
 
     def bind(self, stages: Sequence[Callable],
-             checkpoint_policy=None) -> "BoundPlan":
+             checkpoint_policy=None, tracer=None) -> "BoundPlan":
         """Bind per-stage callables to this plan: the uniform executor
         dispatch.  ``stages[l-1]`` is paper-stage ``l``; the result's
         ``value_and_grad`` runs the jitted remat tree when the plan is
-        remat-expressible and the eager offload executor otherwise."""
-        return BoundPlan(self, list(stages), checkpoint_policy)
+        remat-expressible and the eager offload executor otherwise.
+
+        ``tracer`` (a :class:`repro.obs.trace.Tracer`, opt-in) switches the
+        binding onto the op-faithful executor with per-op
+        ``jax.block_until_ready`` fences, so every execution emits one span
+        per schedule op — the measured timeline for
+        :func:`repro.obs.drift.compare`.  The untraced jitted fast path is
+        untouched; tracing trades its fusion for per-op visibility (the
+        binding reports ``jittable == False`` while traced)."""
+        return BoundPlan(self, list(stages), checkpoint_policy, tracer=tracer)
 
     def execute(self, stages: Sequence[Callable], params: Sequence[Any],
                 x: Any, **kwargs) -> Tuple[Any, List[Any], Any]:
         """Run the exact op sequence through the faithful eager executor
-        (host copies included); returns ``(out, param_grads, input_grad)``."""
+        (host copies included); returns ``(out, param_grads, input_grad)``.
+        Pass ``tracer=`` (a :class:`repro.obs.trace.Tracer`) to record one
+        span per executed op."""
         from ..core.executor import execute_schedule
         return execute_schedule(self.schedule, stages, params, x, **kwargs)
+
+    def drift(self, trace) -> "Any":
+        """Plan-vs-actual drift report for a trace recorded while executing
+        this plan (:func:`repro.obs.drift.compare`)."""
+        from ..obs.drift import compare
+        return compare(self, trace)
 
     # -- persistence -------------------------------------------------------
 
@@ -252,10 +268,12 @@ class BoundPlan:
     """
 
     def __init__(self, plan: MemoryPlan, stages: Sequence[Callable],
-                 checkpoint_policy=None):
+                 checkpoint_policy=None, tracer=None):
         self.plan = plan
         self.stages = list(stages)
-        self.jittable = plan.remat_expressible
+        self.tracer = tracer
+        self.traced = tracer is not None and getattr(tracer, "enabled", True)
+        self.jittable = plan.remat_expressible and not self.traced
         if self.jittable:
             from ..core.rematerialize import build_remat_fn
             self._fn = build_remat_fn(plan.tree, self.stages,
@@ -282,8 +300,10 @@ class BoundPlan:
         from ..offload.executor import execute_offload_schedule
         from ..offload.host_buffer import HostBuffer
         return execute_offload_schedule(self.plan.schedule, self.stages,
-                                        params, x, host_buffer=HostBuffer())
+                                        params, x, host_buffer=HostBuffer(),
+                                        tracer=self.tracer)
 
     def __repr__(self):
-        mode = "jit-remat" if self.jittable else "eager-offload"
+        mode = ("traced-eager" if self.traced
+                else "jit-remat" if self.jittable else "eager-offload")
         return f"BoundPlan({mode}, L={self.plan.length})"

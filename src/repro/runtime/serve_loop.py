@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.lm import StagedLM
+from ..obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -24,12 +25,27 @@ class ServeLoopConfig:
     eos_id: Optional[int] = None
 
 
+def _kv_bytes(cache) -> int:
+    """Total bytes resident in the KV cache pytree."""
+    return int(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(cache)
+                   if hasattr(leaf, "shape")))
+
+
 def run_serving(cfg, params, prompts: np.ndarray, loop: ServeLoopConfig,
-                model: Optional[StagedLM] = None) -> Dict[str, Any]:
-    """prompts: (B, S0) int32 token batch. Returns generations + stats."""
+                model: Optional[StagedLM] = None,
+                tracer=None) -> Dict[str, Any]:
+    """prompts: (B, S0) int32 token batch. Returns generations + stats.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`, opt-in) records one
+    ``Decode`` span per emitted token plus a ``Step`` span for the prefill;
+    each span carries the KV-cache residency in its ``bytes`` field.  The
+    same residency is exported as the ``serve.kv_bytes`` gauge.
+    """
     model = model or StagedLM(cfg)
     B, S0 = prompts.shape
     assert S0 + loop.max_new_tokens <= loop.max_len
+    rec = tracer is not None and getattr(tracer, "enabled", True)
 
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=loop.max_len))
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -38,14 +54,24 @@ def run_serving(cfg, params, prompts: np.ndarray, loop: ServeLoopConfig,
     logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
     next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
     t_prefill = time.perf_counter() - t0
+    kv_bytes = _kv_bytes(cache)
+    obs_metrics.gauge("serve.kv_bytes").set(float(kv_bytes))
+    obs_metrics.histogram("serve.prefill_seconds").observe(t_prefill)
+    if rec:
+        t1 = tracer.now()
+        tracer.record("Step", 0, t1 - t_prefill, t1, bytes=kv_bytes)
 
     out_tokens: List[np.ndarray] = [np.asarray(next_tok)]
     done = np.zeros((B,), bool)
     t0 = time.perf_counter()
-    for _ in range(loop.max_new_tokens - 1):
+    for tok_idx in range(loop.max_new_tokens - 1):
+        td0 = tracer.now() if rec else 0.0
         logits, cache = decode(params, cache, next_tok[:, None])
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         toks = np.asarray(next_tok)
+        if rec:
+            tracer.record("Decode", tok_idx + 1, td0, tracer.now(),
+                          bytes=kv_bytes)
         if loop.eos_id is not None:
             done |= toks == loop.eos_id
             if done.all():
@@ -56,9 +82,11 @@ def run_serving(cfg, params, prompts: np.ndarray, loop: ServeLoopConfig,
     t_decode = time.perf_counter() - t0
     gen = np.stack(out_tokens, axis=1)
     n_decoded = max(gen.shape[1] - 1, 1)
+    obs_metrics.counter("serve.decode_tokens").inc(B * n_decoded)
     return {
         "generations": gen,
         "prefill_s": t_prefill,
         "decode_s": t_decode,
         "decode_tokens_per_s": B * n_decoded / max(t_decode, 1e-9),
+        "kv_bytes": kv_bytes,
     }

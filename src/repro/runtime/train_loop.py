@@ -29,11 +29,13 @@ from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from ..optim.schedules import linear_warmup_cosine
 
 
-def _make_offload_step(model, opt_cfg: AdamWConfig, schedule, lr_fn):
+def _make_offload_step(model, opt_cfg: AdamWConfig, schedule, lr_fn,
+                       tracer=None):
     """Eager train step for a three-tier (host-offload) schedule: gradients
     come from the op-faithful offload executor — ``jax.device_put`` copies and
     all — and only the optimizer update is jitted.  This is the path where
-    the solver's host tier is real, not a remat approximation."""
+    the solver's host tier is real, not a remat approximation.  ``tracer``
+    (opt-in) records one span per schedule op every step."""
     from ..offload.executor import execute_offload_schedule
     from ..offload.host_buffer import HostBuffer
 
@@ -46,7 +48,8 @@ def _make_offload_step(model, opt_cfg: AdamWConfig, schedule, lr_fn):
     def step_fn(params, opt_state, batch, step):
         sp = model.stage_params(params)
         loss, stage_grads, _ = execute_offload_schedule(
-            schedule, stage_fns, sp, batch, host_buffer=HostBuffer())
+            schedule, stage_fns, sp, batch, host_buffer=HostBuffer(),
+            tracer=tracer)
         grads = model.combine_stage_grads(stage_grads)
         lr = lr_fn(step) if lr_fn is not None else None
         new_p, new_o, metrics = upd(grads, opt_state, params, lr)
@@ -76,12 +79,26 @@ class TrainLoopConfig:
     straggler_threshold: float = 3.0
     data_host_count: int = 1
     data_host_index: int = 0
+    trace_path: Optional[str] = None    # write a Perfetto trace.json here
 
 
 def run_training(cfg, loop: TrainLoopConfig, mesh=None,
-                 log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
-    """Train a StagedLM; returns final metrics + state handles."""
+                 log_fn: Callable[[str], None] = print,
+                 tracer=None) -> Dict[str, Any]:
+    """Train a StagedLM; returns final metrics + state handles.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`, opt-in) records per-op
+    spans on the eager offload path and one fenced ``Step`` span per step on
+    the jitted path; when the offload executor ran traced, the result dict
+    gains a ``drift`` report comparing the plan's predicted makespan against
+    the last (warmest) traced step.
+    """
     from ..configs.shapes import ShapeSpec, input_specs
+    from ..obs import metrics as obs_metrics
+
+    if tracer is None and loop.trace_path:
+        from ..obs.trace import Tracer
+        tracer = Tracer(name="train")
 
     model = StagedLM(cfg)
     mesh = mesh or jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
@@ -128,7 +145,8 @@ def run_training(cfg, loop: TrainLoopConfig, mesh=None,
                    f"DP fill")
         if offload_plan is not None:
             step_fn = _make_offload_step(model, opt_cfg,
-                                         offload_plan.schedule, lr_fn)
+                                         offload_plan.schedule, lr_fn,
+                                         tracer=tracer)
         else:
             step_fn = jax.jit(make_train_step(model, opt_cfg, tree, lr_fn,
                                               grad_accum=loop.grad_accum),
@@ -175,9 +193,19 @@ def run_training(cfg, loop: TrainLoopConfig, mesh=None,
                 batch = jax.tree.map(
                     lambda arr, shd: jax.device_put(arr, shd),
                     host_batch, b_shard)
+                t_step = time.perf_counter()
                 params, opt_state, metrics = step_fn(
                     params, opt_state, batch, jnp.asarray(step, jnp.int32))
-                loss = float(metrics["loss"])
+                loss = float(metrics["loss"])  # blocks on the step's result
+                step_s = time.perf_counter() - t_step
+                obs_metrics.histogram("train.step_seconds").observe(step_s)
+                obs_metrics.gauge("train.loss").set(loss)
+                if (tracer is not None and tracer.enabled
+                        and offload_plan is None):
+                    # the offload executor already traced per-op spans; the
+                    # jitted path gets one fenced span per whole step
+                    t1 = tracer.now()
+                    tracer.record("Step", step, t1 - step_s, t1)
                 losses.append(loss)
                 ev = watchdog.step_end(step)
                 if ev is not None:
@@ -209,7 +237,24 @@ def run_training(cfg, loop: TrainLoopConfig, mesh=None,
                                 "step": jnp.asarray(step, jnp.int32)},
                          blocking=True)
         tokens = loop.global_batch * loop.seq_len * max(len(losses), 1)
-        return {"losses": losses, "params": params, "opt_state": opt_state,
-                "last_step": step, "wall_s": wall,
-                "tokens_per_s": tokens / max(wall, 1e-9),
-                "straggler_events": len(watchdog.events)}
+        result = {"losses": losses, "params": params, "opt_state": opt_state,
+                  "last_step": step, "wall_s": wall,
+                  "tokens_per_s": tokens / max(wall, 1e-9),
+                  "straggler_events": len(watchdog.events)}
+        if tracer is not None and tracer.spans:
+            if loop.trace_path:
+                tracer.save(loop.trace_path)
+                log_fn(f"[obs] wrote {len(tracer.spans)} spans to "
+                       f"{loop.trace_path}")
+            if offload_plan is not None:
+                # drift vs the last (warmest) step's per-op spans — earlier
+                # steps carry one-time jit/transfer warm-up costs
+                from ..obs.drift import compare
+                from ..obs.trace import Tracer as _Tracer
+                n_ops = len(offload_plan.schedule)
+                last = _Tracer(name="train-last-step")
+                last.spans.extend(tracer.spans[-n_ops:])
+                report = compare(offload_plan, last)
+                log_fn(f"[obs] {report.summary()}")
+                result["drift"] = report
+        return result

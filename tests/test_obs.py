@@ -1,0 +1,322 @@
+"""Observability stack: metrics registry semantics, span tracing +
+Perfetto/timeline export schemas, plan-vs-actual drift reports, and the
+measure -> calibrate -> re-plan convergence loop (tentpole of repro.obs)."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import profile_stages_measured
+from repro.core.chain import Chain
+from repro.core.schedule import Schedule, simulate
+from repro.obs import metrics
+from repro.obs.drift import calibrate_from_trace, compare
+from repro.obs.trace import (Tracer, category_of, measured_stage_times,
+                             validate_perfetto, validate_trace_file)
+from repro.plan import Budget, PlanRequest, build_plan
+
+from helpers import make_mlp_chain
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_kinds():
+    reg = metrics.MetricsRegistry(enabled=True)
+    c = reg.counter("c")
+    c.inc()
+    c.inc(5)
+    assert c.count == 2 and c.total == 6.0
+    g = reg.gauge("g")
+    g.set(3.0)
+    g.set(1.0)
+    assert g.value == 1.0 and g.max == 3.0 and g.updates == 2
+    h = reg.histogram("h")
+    h.observe(2.0)
+    h.observe(4.0)
+    assert h.count == 2 and h.mean == 3.0 and h.min == 2.0 and h.max == 4.0
+    with h.time():
+        pass
+    assert h.count == 3
+    # same name, wrong kind: loud error, not silent shadowing
+    with pytest.raises(TypeError):
+        reg.gauge("c")
+    snap = reg.snapshot()
+    json.dumps(snap)  # JSON-serializable by construction
+    assert snap["c"]["type"] == "counter" and snap["c"]["total"] == 6.0
+    assert reg.value("c") == 2 and reg.value("g") == 1.0
+    assert reg.value("absent", default=-1.0) == -1.0
+
+
+def test_metrics_registry_disabled_is_noop():
+    reg = metrics.MetricsRegistry(enabled=False)
+    reg.counter("x").inc()
+    reg.gauge("y").set(5)
+    with reg.histogram("z").time():
+        pass
+    assert reg.snapshot() == {}
+    assert reg.value("x", default=0.0) == 0.0
+
+
+def test_metrics_save_roundtrip(tmp_path):
+    reg = metrics.MetricsRegistry(enabled=True)
+    reg.counter("a.b").inc(7)
+    path = tmp_path / "metrics.json"
+    reg.save(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["a.b"]["total"] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# tracer + exporters
+# ---------------------------------------------------------------------------
+
+def _tiny_plan(L=4, frac=0.6, seed=0):
+    stages, params, x = make_mlp_chain(L, seed=seed)
+    chain = profile_stages_measured(stages, params, x, repeats=1)
+    plan = build_plan(PlanRequest(strategy="optimal",
+                                  budget=Budget.fraction(frac),
+                                  num_slots=200), chain)
+    return plan, stages, params, x
+
+
+def test_traced_execution_emits_one_span_per_op(tmp_path):
+    plan, stages, params, x = _tiny_plan()
+    tr = Tracer(name="test")
+    out, grads, dx = plan.execute(stages, params, x, tracer=tr)
+    assert len(tr.spans) == len(plan.schedule.ops)
+    assert [s.op for s in tr.spans] == [k for k, _ in plan.schedule.ops]
+    assert all(s.t_end >= s.t_start for s in tr.spans)
+    assert tr.makespan > 0
+    # an untraced execution returns identical gradients (tracing is
+    # observability, not a different numeric path)
+    out2, grads2, dx2 = plan.execute(stages, params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2))
+
+
+def test_perfetto_export_is_wellformed(tmp_path):
+    plan, stages, params, x = _tiny_plan()
+    tr = Tracer(name="test")
+    plan.execute(stages, params, x, tracer=tr)
+    doc = tr.to_perfetto()
+    events = validate_perfetto(doc)
+    assert len(events) == len(tr.spans)
+    # one metadata track per category, names resolve
+    meta = [e for e in doc["traceEvents"] if e.get("ph") == "M"]
+    assert {m["args"]["name"] for m in meta} >= {"forward", "backward"}
+    for e in events:
+        assert e["dur"] >= 0
+    path = tmp_path / "trace.json"
+    tr.save(str(path))
+    assert validate_trace_file(str(path)) == len(tr.spans)
+
+
+def test_perfetto_validation_rejects_bad_traces():
+    with pytest.raises(ValueError):
+        validate_perfetto({})
+    with pytest.raises(ValueError):
+        validate_perfetto({"traceEvents": []})
+    good = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 10.0, "dur": 1.0}]}
+    validate_perfetto(good)
+    bad_order = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 10.0, "dur": 1.0},
+        {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 5.0, "dur": 1.0}]}
+    with pytest.raises(ValueError):
+        validate_perfetto(bad_order)
+    bad_dur = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0, "dur": -1.0}]}
+    with pytest.raises(ValueError):
+        validate_perfetto(bad_dur)
+
+
+def test_timeline_export_matches_plan_schema():
+    plan, stages, params, x = _tiny_plan()
+    tr = Tracer(name="test")
+    plan.execute(stages, params, x, tracer=tr)
+    predicted = plan.timeline()
+    measured = tr.to_timeline()
+    assert len(measured) == len(predicted)
+    assert set(measured[0]) == set(predicted[0])
+    assert [(r["op"], r["arg"]) for r in measured] \
+        == [(r["op"], r["arg"]) for r in predicted]
+
+
+def test_span_categories():
+    assert category_of("Fall") == "forward"
+    assert category_of("Fck") == "forward"
+    assert category_of("B") == "backward"
+    assert category_of("Foff") == "transfer"
+    assert category_of("Prefetch") == "transfer"
+    assert category_of("Decode") == "decode"
+    assert category_of("whatever") == "misc"
+
+
+def test_measured_stage_times_pools_and_nans():
+    from repro.obs.trace import Span
+    spans = [Span("Fall", 1, 0.0, 1.0), Span("Fck", 1, 1.0, 4.0),
+             Span("B", 2, 4.0, 6.0)]
+    uf, ub = measured_stage_times(spans, length=2)
+    assert uf[0] == pytest.approx(2.0)     # mean of the two stage-1 samples
+    assert math.isnan(uf[1]) and math.isnan(uf[2])
+    assert ub[1] == pytest.approx(2.0)
+    assert math.isnan(ub[0]) and math.isnan(ub[2])
+
+
+# ---------------------------------------------------------------------------
+# drift: compare / replay / calibrate
+# ---------------------------------------------------------------------------
+
+def test_zero_drift_on_simulator_replay():
+    """Replaying the plan's own predicted timeline through compare() must
+    report a ratio of exactly 1 — the simulator agrees with itself."""
+    plan, *_ = _tiny_plan()
+    sim = Tracer.from_timeline(plan.timeline())
+    report = plan.drift(sim)
+    assert report.makespan_ratio == pytest.approx(1.0, abs=1e-9)
+    assert report.layer_mape == pytest.approx(0.0, abs=1e-6)
+    assert report.span_count == len(plan.schedule.ops)
+    json.dumps(report.to_json())
+    assert "DriftReport" in report.summary()
+
+
+def test_chain_calibrate_roundtrip_and_validation():
+    rng = np.random.default_rng(0)
+    n = 5
+    ch = Chain.make(uf=rng.uniform(1, 2, n), ub=rng.uniform(1, 2, n),
+                    wa=np.ones(n), wabar=np.ones(n))
+    # calibrating with the chain's own times is the identity
+    same = ch.calibrate(uf=ch.uf, ub=ch.ub)
+    np.testing.assert_allclose(same.uf, ch.uf)
+    np.testing.assert_allclose(same.ub, ch.ub)
+    # NaN entries keep the modeled value
+    uf = np.full(n, np.nan)
+    uf[2] = 9.0
+    cal = ch.calibrate(uf=uf)
+    assert cal.uf[2] == pytest.approx(9.0)
+    np.testing.assert_allclose(np.delete(cal.uf, 2), np.delete(ch.uf, 2))
+    np.testing.assert_allclose(cal.ub, ch.ub)
+    # blend interpolates model -> measurement
+    half = ch.calibrate(uf=np.full(n, 3.0), blend=0.5)
+    np.testing.assert_allclose(half.uf, (np.asarray(ch.uf) + 3.0) / 2)
+    with pytest.raises(ValueError):
+        ch.calibrate(uf=ch.uf, blend=1.5)
+    with pytest.raises(ValueError):
+        ch.calibrate(uf=np.ones(n - 1))
+    with pytest.raises(ValueError):
+        ch.calibrate(ub=np.full(n, -1.0))
+
+
+def test_calibration_closes_drift_on_perturbed_chain():
+    """Plan on a mispriced chain, 'measure' by simulating the schedule on
+    the true chain, calibrate, re-plan: the drift must close exactly (the
+    simulator sums per-op costs, and calibration recovers them all)."""
+    rng = np.random.default_rng(7)
+    n = 7
+    true = Chain.make(uf=rng.uniform(1, 3, n), ub=rng.uniform(2, 5, n),
+                      wa=rng.integers(1, 4, n).astype(float),
+                      wabar=rng.integers(1, 6, n).astype(float))
+    wrong = Chain.make(uf=np.asarray(true.uf) * 3.0,
+                       ub=np.asarray(true.ub) * 0.4,
+                       wa=true.wa, wabar=true.wabar)
+    peak = simulate(wrong, Schedule.store_all(wrong.length)).peak_mem
+    req = PlanRequest(strategy="optimal", budget=Budget.bytes(peak * 0.6),
+                      num_slots=200)
+    plan = build_plan(req, wrong)
+
+    def measure(p):
+        rows = []
+        res = simulate(true, p.schedule, trace=rows)
+        assert res.valid
+        return Tracer.from_timeline(rows, name="measured")
+
+    before = compare(plan, measure(plan))
+    err_before = abs(before.makespan_ratio - 1.0)
+    assert err_before > 0.2  # the misprice is visible
+
+    calibrated = calibrate_from_trace(plan.chain, measure(plan))
+    np.testing.assert_allclose(calibrated.uf, true.uf, rtol=1e-12)
+    np.testing.assert_allclose(calibrated.ub, true.ub, rtol=1e-12)
+    plan2 = build_plan(req, calibrated)
+    after = compare(plan2, measure(plan2))
+    err_after = abs(after.makespan_ratio - 1.0)
+    assert err_after < 1e-9
+    assert err_after < err_before
+
+
+def test_partial_trace_calibrates_only_sampled_stages():
+    rng = np.random.default_rng(1)
+    n = 4
+    ch = Chain.make(uf=rng.uniform(1, 2, n), ub=rng.uniform(1, 2, n),
+                    wa=np.ones(n), wabar=np.ones(n))
+    from repro.obs.trace import Span
+    spans = [Span("Fall", 1, 0.0, 5.0)]   # only stage 1's forward sampled
+    cal = calibrate_from_trace(ch, spans)
+    assert cal.uf[0] == pytest.approx(5.0)
+    np.testing.assert_allclose(cal.uf[1:], np.asarray(ch.uf)[1:])
+    np.testing.assert_allclose(cal.ub, ch.ub)
+
+
+# ---------------------------------------------------------------------------
+# runtime instrumentation
+# ---------------------------------------------------------------------------
+
+def test_serve_loop_traces_decode_spans():
+    import jax
+    from repro.configs import smoke_config
+    from repro.models.lm import StagedLM
+    from repro.runtime.serve_loop import ServeLoopConfig, run_serving
+
+    cfg = smoke_config("qwen1.5-4b")
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab_size
+    metrics.reset()
+    tr = Tracer(name="serve")
+    out = run_serving(cfg, params, prompts,
+                      ServeLoopConfig(max_new_tokens=5, max_len=16),
+                      model=model, tracer=tr)
+    decodes = [s for s in tr.spans if s.op == "Decode"]
+    assert len(decodes) == 4                       # max_new_tokens - 1
+    assert [s.arg for s in decodes] == [1, 2, 3, 4]
+    assert all(s.bytes == out["kv_bytes"] for s in decodes)
+    steps = [s for s in tr.spans if s.op == "Step"]
+    assert len(steps) == 1                         # the prefill
+    assert metrics.value("serve.kv_bytes") == out["kv_bytes"] > 0
+    assert metrics.value("serve.decode_tokens") >= 1
+    validate_perfetto(tr.to_perfetto())
+
+
+# ---------------------------------------------------------------------------
+# acceptance: measured execution -> calibrate -> re-plan convergence
+# ---------------------------------------------------------------------------
+
+def test_calibration_converges_on_executed_plan():
+    """One calibrate pass from a *measured* trace brings the re-planned
+    predicted makespan close to the measured one.  Tolerance is generous:
+    this runs on shared CPU runners where per-op wall times wobble; the
+    exact numbers live in BENCH_solver.json's prediction section."""
+    plan, stages, params, x = _tiny_plan(L=4, frac=0.7, seed=3)
+
+    def measure(p):
+        p.execute(stages, params, x)          # warm jit/vjp caches
+        tr = Tracer(name="acceptance")
+        p.execute(stages, params, x, tracer=tr)
+        return tr
+
+    trace = measure(plan)
+    calibrated = calibrate_from_trace(plan.chain, trace)
+    plan2 = build_plan(PlanRequest(strategy="optimal",
+                                   budget=Budget.fraction(0.7),
+                                   num_slots=200), calibrated)
+    after = compare(plan2, measure(plan2))
+    # generous CPU-CI band around predicted == measured
+    assert 1 / 2.0 < after.makespan_ratio < 2.0
+    # and the drift did not get worse than the uncalibrated prediction
+    before = compare(plan, trace)
+    err_before = abs(math.log(before.makespan_ratio))
+    err_after = abs(math.log(after.makespan_ratio))
+    assert err_after <= err_before + math.log(1.5)

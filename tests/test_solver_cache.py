@@ -157,3 +157,51 @@ def test_cache_param_bypass(cache_dir):
     st = solver_cache.stats()
     assert st["puts"] == 0 and st["misses"] == 0
     assert list(cache_dir.glob("*.pkl")) == []
+
+
+def test_obs_counters_mirror_cache_stats(cache_dir):
+    """Every stats bump lands in the process metrics registry too
+    (``solver_cache.*`` counters, repro.obs.metrics)."""
+    from repro.obs import metrics as obs_metrics
+
+    obs_metrics.reset()
+    ch, m = _chain_and_budget(seed=7)
+    solve_optimal(ch, m, num_slots=int(m))
+    assert obs_metrics.value("solver_cache.misses") == 1
+    assert obs_metrics.value("solver_cache.puts") == 1
+    assert obs_metrics.value("solver_cache.hits") == 0
+    solve_optimal(ch, m, num_slots=int(m))
+    assert obs_metrics.value("solver_cache.hits") == 1
+    assert obs_metrics.value("solver_cache.misses") == 1
+    # and they agree with the instance stats
+    st = solver_cache.stats()
+    assert obs_metrics.value("solver_cache.hits") == st["hits"]
+    assert obs_metrics.value("solver_cache.misses") == st["misses"]
+
+
+def test_lru_evictions_are_counted(tmp_path, monkeypatch):
+    """Overflowing a capacity-2 memory LRU evicts oldest entries and counts
+    each one, in both the instance stats and the obs registry."""
+    from repro.obs import metrics as obs_metrics
+
+    monkeypatch.delenv("REPRO_SOLVER_CACHE", raising=False)
+    obs_metrics.reset()
+    solver_cache.configure(capacity=2, directory=None)
+    try:
+        for seed in range(4):
+            ch, m = _chain_and_budget(seed=20 + seed)
+            solve_optimal(ch, m, num_slots=int(m))
+        st = solver_cache.stats()
+        assert st["puts"] == 4
+        assert st["evictions"] == 2
+        assert obs_metrics.value("solver_cache.evictions") == 2
+        # the two most-recent entries survived and still hit
+        for seed in (2, 3):
+            ch, m = _chain_and_budget(seed=20 + seed)
+            solve_optimal(ch, m, num_slots=int(m))
+        st = solver_cache.stats()
+        assert st["hits"] == 2
+        assert st["misses"] == 4
+        assert st["evictions"] == 2
+    finally:
+        solver_cache.reset()
