@@ -1,0 +1,54 @@
+"""`repro.check` — static analysis for plans, kernels, and repo invariants.
+
+The planning stack's value proposition is that a *computed* schedule is
+provably valid; this package is where "provably" stops meaning "we ran it
+once and it did not crash".  Three passes, all importable without jax:
+
+- :mod:`repro.check.schedule_verifier` — an abstract interpreter over
+  :class:`~repro.core.schedule.Schedule` op streams.  It tracks a
+  liveness-and-residency lattice per activation (absent / bare /
+  full-history / host-copy) and proves, without simulating, that every
+  backward has its required state, nothing is used after free, the offload
+  protocol is respected, slot discipline holds, and symbolic device/host
+  peaks never exceed the plan's budget.  Surfaced as
+  :meth:`repro.plan.MemoryPlan.verify` (enforced on ``save``/``load``,
+  opt-in before ``bind``/``execute`` via ``REPRO_CHECK=1``).
+- :mod:`repro.check.kernel_analyzer` — a static pass over the
+  :mod:`repro.kernels.dp_fill` Pallas kernel *sources* (AST, never
+  imported): write-disjointness across grid steps for non-revisited blocks,
+  write-before-read domination for the fused fill's revisited output
+  blocks, and in-bounds dynamic slices given the padded row heights — the
+  machine-checked replacement for PR 5's hand proofs, re-run whenever
+  :func:`repro.core.solver_cache.code_fingerprint` changes.
+- :mod:`repro.check.lint` — an AST linter for the invariants previous PRs
+  asserted ad-hoc: no module-level jax import in the numpy-only core/obs
+  modules, no policy-string parsing outside ``plan/compat.py``, metric
+  names in the dotted ``noun.verb`` registry convention.
+
+``python -m repro.check`` runs the linter and the kernel analyzer as a CI
+gate (the ``static-checks`` job).
+"""
+
+from .kernel_analyzer import KernelIssue, analyze_dp_fill
+from .lint import LintViolation, lint_paths, lint_repo
+from .schedule_verifier import verify_schedule, verify_slot_discipline
+from .violations import (
+    VIOLATION_KINDS,
+    PlanVerificationError,
+    VerificationReport,
+    Violation,
+)
+
+__all__ = [
+    "KernelIssue",
+    "VIOLATION_KINDS",
+    "LintViolation",
+    "PlanVerificationError",
+    "VerificationReport",
+    "Violation",
+    "analyze_dp_fill",
+    "lint_paths",
+    "lint_repo",
+    "verify_schedule",
+    "verify_slot_discipline",
+]

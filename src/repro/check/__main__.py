@@ -1,0 +1,94 @@
+"""``python -m repro.check`` — the static-checks CI gate.
+
+Runs the repo-invariant linter over every module under ``src/repro`` and the
+kernel analyzer over the shipped ``kernels/dp_fill`` Pallas kernels; exits
+non-zero on any finding.  Pure AST work: no jax, no kernel execution, safe
+in any environment.
+
+The kernel analysis is cached on
+:func:`repro.core.solver_cache.code_fingerprint` (which hashes the solver +
+kernel sources): an unchanged tree skips straight to "cached ok".  Pass
+``--force`` to re-analyze regardless, ``--no-cache`` to skip reading and
+writing the stamp (CI uses ``--force`` so the gate never trusts a stamp).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .kernel_analyzer import analyze_dp_fill
+from .lint import lint_repo
+
+
+def _stamp_path() -> str:
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache")
+    return os.path.join(base, "repro", "kernel-analysis.ok")
+
+
+def _fingerprint() -> str:
+    from ..core.solver_cache import code_fingerprint
+
+    return code_fingerprint()
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="repro static checks: repo lint + Pallas kernel analysis",
+    )
+    parser.add_argument("--force", action="store_true",
+                        help="re-run the kernel analysis even if the code "
+                             "fingerprint matches the cached pass")
+    parser.add_argument("--no-cache", action="store_true",
+                        help="neither read nor write the analysis stamp")
+    parser.add_argument("--skip-kernels", action="store_true",
+                        help="run only the repo linter")
+    args = parser.parse_args(argv)
+
+    failed = False
+
+    lint = lint_repo()
+    if lint:
+        failed = True
+        print(f"lint: {len(lint)} violation(s)")
+        for v in lint:
+            print(f"  {v}")
+    else:
+        print("lint: ok")
+
+    if not args.skip_kernels:
+        fp = _fingerprint()
+        stamp = _stamp_path()
+        cached = False
+        if not args.force and not args.no_cache:
+            try:
+                with open(stamp, "r", encoding="utf-8") as f:
+                    cached = f.read().strip() == fp
+            except OSError:
+                cached = False
+        if cached:
+            print(f"kernel-analysis: cached ok ({fp[:12]})")
+        else:
+            issues = analyze_dp_fill()
+            if issues:
+                failed = True
+                print(f"kernel-analysis: {len(issues)} issue(s)")
+                for i in issues:
+                    print(f"  {i}")
+            else:
+                print(f"kernel-analysis: ok ({fp[:12]})")
+                if not args.no_cache:
+                    try:
+                        os.makedirs(os.path.dirname(stamp), exist_ok=True)
+                        with open(stamp, "w", encoding="utf-8") as f:
+                            f.write(fp + "\n")
+                    except OSError:
+                        pass
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,307 @@
+"""AST-based repo-invariant linter (``python -m repro.check``).
+
+Enforces, as a CI gate, the invariants earlier PRs established ad-hoc:
+
+- **jax-import** — the numpy-only modules (all of ``core/`` except the three
+  executor-side modules, all of ``obs/``, all of ``check/``) must not import
+  ``jax`` — or any known jax-importing repro module — at module level.  This
+  is what keeps ``import repro.core`` / ``repro.obs.metrics`` working on
+  plan-serving hosts with no accelerator stack (the lazy-import discipline
+  PRs 4–6 relied on; the dynamic side of the same guard is the jax-blocked
+  subprocess test in ``tests/test_check_lint.py``).
+- **policy-parse** — legacy policy *strings* are parsed in exactly one
+  place, ``plan/compat.py`` (the PR 3 invariant).  Any
+  ``x.startswith("optimal..."/"periodic:"/...)`` on a policy prefix outside
+  it is flagged.
+- **metric-name** — literal metric names passed to
+  ``metrics.counter/gauge/histogram/value`` must follow the dotted
+  ``noun.verb`` registry convention (``solver_cache.hits``,
+  ``train.step_seconds``); f-string names are checked with placeholders
+  substituted.
+
+The linter is purely syntactic (no imports of the linted modules), so it
+runs in any environment — including ones where importing the module under
+inspection would fail, which is precisely the regression it guards against.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, List, Optional
+
+# -- rule configuration ------------------------------------------------------
+
+# Modules that must stay importable without jax.  Paths relative to the
+# ``src/repro`` root, directory entries cover every .py directly inside.
+NUMPY_ONLY_DIRS = ("core", "obs", "check")
+# core modules that *are* the jax boundary (execution side) — exempt.
+JAX_BOUNDARY = {
+    "core/executor.py",
+    "core/planner.py",
+    "core/rematerialize.py",
+}
+# Importing any of these at module level re-introduces jax transitively.
+_JAX_ROOTS = ("jax", "jaxlib")
+_JAX_REPRO_MODULES = (
+    "repro.core.executor",
+    "repro.core.planner",
+    "repro.core.rematerialize",
+    "repro.offload.executor",
+    "repro.offload.host_buffer",
+    "repro.ckpt",
+    "repro.kernels",
+)
+_JAX_RELATIVE = ("executor", "planner", "rematerialize", "host_buffer")
+
+# Policy-string prefixes whose parsing is confined to plan/compat.py.
+POLICY_PREFIXES = (
+    "optimal",
+    "optimal_offload",
+    "periodic:",
+    "rotor:",
+    "revolve:",
+    "store_all",
+    "full_remat",
+    "min_memory",
+)
+POLICY_PARSE_ALLOWED = ("plan/compat.py",)
+
+# Dotted lowercase noun.verb convention for registry metric names.
+METRIC_NAME_RE = re.compile(r"^[a-z0-9_]+(\.[a-z0-9_]+)+$")
+_METRIC_FNS = {"counter", "gauge", "histogram", "value"}
+_METRIC_RECEIVERS = {"metrics", "_obs", "obs"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# -- helpers -----------------------------------------------------------------
+
+
+def _module_level_imports(tree: ast.Module) -> Iterable[ast.stmt]:
+    """Import statements at module scope, descending into plain module-level
+    ``if``/``try`` blocks except ``if TYPE_CHECKING:`` (annotation-only)."""
+    stack: List[ast.stmt] = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+        elif isinstance(node, ast.If):
+            test = ast.dump(node.test)
+            if "TYPE_CHECKING" not in test:
+                stack.extend(node.body)
+                stack.extend(node.orelse)
+        elif isinstance(node, ast.Try):
+            stack.extend(node.body)
+            for h in node.handlers:
+                stack.extend(h.body)
+            stack.extend(node.orelse)
+            stack.extend(node.finalbody)
+
+
+def _is_jax_module(name: str) -> bool:
+    root = name.split(".")[0]
+    if root in _JAX_ROOTS:
+        return True
+    return any(
+        name == m or name.startswith(m + ".") for m in _JAX_REPRO_MODULES
+    )
+
+
+def _literal_str(node: ast.AST) -> Optional[str]:
+    """The string a literal (or f-string with placeholders → ``"x"``)
+    evaluates to, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            else:
+                parts.append("x")
+        return "".join(parts)
+    return None
+
+
+# -- rules -------------------------------------------------------------------
+
+
+def _check_jax_imports(rel: str, tree: ast.Module) -> List[LintViolation]:
+    parts = rel.split("/")
+    in_scope = (
+        len(parts) == 2
+        and parts[0] in NUMPY_ONLY_DIRS
+        and rel not in JAX_BOUNDARY
+    )
+    if not in_scope:
+        return []
+    out = []
+    for node in _module_level_imports(tree):
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        else:  # ImportFrom
+            if node.level:  # relative: resolve against the package
+                pkg = ["repro"] + parts[:-1]
+                base = ".".join(pkg[: len(pkg) - (node.level - 1)])
+                mod = node.module or ""
+                names = [
+                    (base + "." + mod if mod else base)
+                    + "."
+                    + a.name.split(".")[0]
+                    for a in node.names
+                ]
+                # also flag `from . import executor`-style by bare name
+                names += [
+                    a.name
+                    for a in node.names
+                    if a.name in _JAX_RELATIVE and not mod
+                ]
+                if mod:
+                    names.append(base + "." + mod)
+            else:
+                names = [node.module or ""]
+        for name in names:
+            if _is_jax_module(name) or name.split(".")[-1] in _JAX_RELATIVE:
+                out.append(
+                    LintViolation(
+                        rel,
+                        node.lineno,
+                        "jax-import",
+                        f"module-level import of {name!r} in a numpy-only "
+                        f"module (use a function-local import)",
+                    )
+                )
+                break
+    return out
+
+
+def _check_policy_parse(rel: str, tree: ast.Module) -> List[LintViolation]:
+    if rel in POLICY_PARSE_ALLOWED:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "startswith"
+            and node.args
+        ):
+            continue
+        args = node.args[0]
+        literals = (
+            [_literal_str(e) for e in args.elts]
+            if isinstance(args, ast.Tuple)
+            else [_literal_str(args)]
+        )
+        for lit in literals:
+            if lit is not None and any(
+                lit == p or lit.startswith(p) for p in POLICY_PREFIXES
+            ):
+                out.append(
+                    LintViolation(
+                        rel,
+                        node.lineno,
+                        "policy-parse",
+                        f"policy-string parsing ({lit!r}) outside "
+                        f"plan/compat.py — route through the compat shim",
+                    )
+                )
+                break
+    return out
+
+
+def _check_metric_names(rel: str, tree: ast.Module) -> List[LintViolation]:
+    # names imported straight from the metrics module count as receivers too
+    imported: set = set()
+    for node in _module_level_imports(tree):
+        if isinstance(node, ast.ImportFrom) and (node.module or "").endswith(
+            "metrics"
+        ):
+            imported |= {a.asname or a.name for a in node.names}
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        fn = node.func
+        is_metric_call = (
+            isinstance(fn, ast.Attribute)
+            and fn.attr in _METRIC_FNS
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id in _METRIC_RECEIVERS
+        ) or (
+            isinstance(fn, ast.Name)
+            and fn.id in _METRIC_FNS
+            and fn.id in imported
+        )
+        if not is_metric_call:
+            continue
+        name = _literal_str(node.args[0])
+        if name is not None and not METRIC_NAME_RE.match(name):
+            out.append(
+                LintViolation(
+                    rel,
+                    node.lineno,
+                    "metric-name",
+                    f"metric name {name!r} does not match the dotted "
+                    f"noun.verb convention ({METRIC_NAME_RE.pattern})",
+                )
+            )
+    return out
+
+
+_RULES = (_check_jax_imports, _check_policy_parse, _check_metric_names)
+
+
+# -- drivers -----------------------------------------------------------------
+
+
+def lint_file(path: str, root: str) -> List[LintViolation]:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [
+            LintViolation(rel, e.lineno or 0, "syntax", f"cannot parse: {e}")
+        ]
+    out: List[LintViolation] = []
+    for rule in _RULES:
+        out.extend(rule(rel, tree))
+    return out
+
+
+def lint_paths(paths: Iterable[str], root: str) -> List[LintViolation]:
+    out: List[LintViolation] = []
+    for p in sorted(paths):
+        out.extend(lint_file(p, root))
+    return out
+
+
+def repo_root() -> str:
+    """The ``src/repro`` package root this module was loaded from."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_repo(root: Optional[str] = None) -> List[LintViolation]:
+    """Lint every ``.py`` under ``src/repro`` (the CI entry point)."""
+    root = root or repo_root()
+    files = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if fn.endswith(".py"):
+                files.append(os.path.join(dirpath, fn))
+    return lint_paths(files, root)

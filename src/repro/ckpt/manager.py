@@ -28,6 +28,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+_PLAN_FILE = "memory.plan"
+
 
 def _flatten(tree: Any) -> List[Tuple[str, np.ndarray]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -49,26 +51,33 @@ class CheckpointManager:
 
     # -- write --------------------------------------------------------------
 
-    def save(self, step: int, state: Any, blocking: bool = True) -> None:
+    def save(self, step: int, state: Any, blocking: bool = True,
+             plan: Any = None) -> None:
+        """Write one checkpoint.  ``plan`` (an optional
+        :class:`~repro.plan.MemoryPlan`) is embedded in the step directory
+        under the same atomic rename — the plan that trained a step travels
+        with its weights and is statically verified both on the way in
+        (``MemoryPlan.save``) and on the way out (:meth:`restore_plan`)."""
         self.wait()  # one async save in flight at a time
         # snapshot to host memory synchronously (cheap vs device compute)
         leaves = _flatten(state)
         structure = jax.tree_util.tree_structure(state)
         if blocking:
-            self._write(step, leaves, structure)
+            self._write(step, leaves, structure, plan)
         else:
             self._thread = threading.Thread(
-                target=self._write_guard, args=(step, leaves, structure),
+                target=self._write_guard,
+                args=(step, leaves, structure, plan),
                 daemon=True)
             self._thread.start()
 
-    def _write_guard(self, step, leaves, structure):
+    def _write_guard(self, step, leaves, structure, plan=None):
         try:
-            self._write(step, leaves, structure)
+            self._write(step, leaves, structure, plan)
         except BaseException as e:  # surfaced on next wait()
             self._error = e
 
-    def _write(self, step: int, leaves, structure) -> None:
+    def _write(self, step: int, leaves, structure, plan=None) -> None:
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
@@ -82,6 +91,10 @@ class CheckpointManager:
                 "dtype": str(arr.dtype),
                 "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
             }
+        if plan is not None:
+            # MemoryPlan.save verifies the schedule before anything lands
+            plan.save(os.path.join(tmp, _PLAN_FILE))
+            manifest["plan"] = _PLAN_FILE
         mpath = os.path.join(tmp, "manifest.json")
         with open(mpath, "w") as f:
             json.dump(manifest, f)
@@ -167,6 +180,23 @@ class CheckpointManager:
             return s, jax.tree_util.tree_unflatten(treedef, out)
         raise FileNotFoundError(
             f"no valid checkpoint found in {self.dir} (tried {candidates})")
+
+    def restore_plan(self, step: Optional[int] = None, chain: Any = None):
+        """The :class:`~repro.plan.MemoryPlan` embedded at ``step`` (default:
+        newest step that has one), or ``None`` if no retained checkpoint
+        carries a plan.  The plan is statically re-verified on load and,
+        with ``chain`` given, validated against the chain's content hash —
+        so a resumed run cannot silently train under a stale or corrupted
+        schedule."""
+        from ..plan.plan import MemoryPlan
+
+        candidates = ([step] if step is not None
+                      else list(reversed(self.all_steps())))
+        for s in candidates:
+            path = os.path.join(self.dir, f"step_{s:08d}", _PLAN_FILE)
+            if os.path.exists(path):
+                return MemoryPlan.load(path, chain)
+        return None
 
 
 def restore_to_sharding(manager: CheckpointManager, target: Any,

@@ -8,25 +8,42 @@ from .schedule import (Schedule, SimResult, assert_valid, simulate,
 from .solver import (AllNode, CkNode, Leaf, Solution, Tree, solve_optimal,
                      tree_to_schedule)
 from .baselines import best_periodic, chen_sqrt, periodic, revolve
-from .rematerialize import (build_remat_fn, count_checkpoint_scopes,
-                            full_remat_tree, periodic_tree, sequential_tree,
-                            tree_stage_span)
-from .executor import execute_schedule, reference_grads
-from .planner import (measure_host_bandwidth, profile_stages_analytic,
-                      profile_stages_measured, residual_bytes)
-# The policy-shim re-exports are lazy (PEP 562): policies.py imports
-# repro.plan, which imports straight back into repro.core — importing it
-# eagerly here made `import repro.plan` crash with a circular-import error
-# whenever it was the process's *first* repro import (exactly the README
-# quickstart).  Every name still resolves via __getattr__ below.
+# Execution-side re-exports are lazy (PEP 562), for two reasons:
+# - policies.py imports repro.plan, which imports straight back into
+#   repro.core — importing it eagerly here made `import repro.plan` crash
+#   with a circular-import error whenever it was the process's *first*
+#   repro import (exactly the README quickstart).
+# - rematerialize/executor/planner are the jax boundary; importing them
+#   eagerly made `import repro.core` require jax, breaking plan-serving
+#   hosts with no accelerator stack (guarded by the jax-blocked subprocess
+#   test in tests/test_check_lint.py and the `jax-import` lint rule).
+# Every name still resolves via __getattr__ below.
 _POLICY_EXPORTS = ("PolicyPlan", "make_policy_plan", "make_policy_tree",
                    "parse_budget", "policy_to_request", "resolve_policy")
+_JAX_EXPORTS = {
+    "build_remat_fn": "rematerialize",
+    "count_checkpoint_scopes": "rematerialize",
+    "full_remat_tree": "rematerialize",
+    "periodic_tree": "rematerialize",
+    "sequential_tree": "rematerialize",
+    "tree_stage_span": "rematerialize",
+    "execute_schedule": "executor",
+    "reference_grads": "executor",
+    "measure_host_bandwidth": "planner",
+    "profile_stages_analytic": "planner",
+    "profile_stages_measured": "planner",
+    "residual_bytes": "planner",
+}
 
 
 def __getattr__(name):
     if name in _POLICY_EXPORTS:
         from . import policies
         return getattr(policies, name)
+    if name in _JAX_EXPORTS:
+        import importlib
+        mod = importlib.import_module("." + _JAX_EXPORTS[name], __name__)
+        return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [

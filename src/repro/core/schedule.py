@@ -109,6 +109,12 @@ class SimResult:
     host_peak_mem: float = 0.0
     # time spent stalled waiting on host transfers (prefetch wait + copy)
     transfer_stall: float = 0.0
+    # structured failure info (mirrors repro.check.violations.VIOLATION_KINDS):
+    # the violation kind, the 0-based op index it fired at (-1 for
+    # whole-schedule errors), and a short residency summary of the live set
+    error_kind: str = ""
+    error_index: int = -1
+    error_state: str = ""
 
 
 def _size(chain: Chain, item: Item) -> float:
@@ -124,6 +130,20 @@ def _size(chain: Chain, item: Item) -> float:
             return 0.0  # δ^{L+1} = ∂L/∂L, a scalar
         return float(chain.wdelta[i])
     raise ValueError(f"unknown item {item}")
+
+
+def _residency(live: dict, host_copies: set) -> str:
+    """Compact lattice state: ``dev a{0,3} ā{5} δ{6} | host{2}`` — same
+    format as ``repro.check.schedule_verifier.residency_summary``."""
+    parts = []
+    for kind, tag in (("a", "a"), ("abar", "ā"), ("delta", "δ")):
+        idxs = sorted(i for (k, i) in live if k == kind)
+        if idxs:
+            parts.append(tag + "{" + ",".join(map(str, idxs)) + "}")
+    dev = "dev " + " ".join(parts) if parts else "dev empty"
+    if host_copies:
+        dev += " | host{" + ",".join(map(str, sorted(host_copies))) + "}"
+    return dev
 
 
 def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
@@ -175,13 +195,19 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
             trace.append({"op": kind, "arg": arg, "t_start": t0, "t_end": t1,
                           "device_mem": mem, "host_mem": host_mem})
 
-    for op in schedule.ops:
+    def fail(kind_: str, idx_: int, msg: str, **kw) -> SimResult:
+        state = _residency(live, host_copies)
+        err = msg if idx_ < 0 else f"{msg} at op[{idx_}] [{state}]"
+        return SimResult(False, t, peak, err, error_kind=kind_,
+                         error_index=idx_, error_state=state, **kw)
+
+    for idx, op in enumerate(schedule.ops):
         kind, arg = op
         t_op = t
         if kind == FREE:
             item = arg  # type: ignore[assignment]
             if item not in live:
-                return SimResult(False, t, peak, f"Free of non-live {item}")
+                return fail("free-not-live", idx, f"Free of non-live {item}")
             if item in ckpt:
                 persistent = False
             mem -= _size(chain, item)
@@ -192,19 +218,18 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
         if kind in _OFFLOAD_KINDS:
             i = int(arg)  # activation index, 0..L
             if chain.host is None or not chain.host.enabled:
-                return SimResult(False, t, peak,
-                                 f"{kind} a^{i}: chain has no host tier")
+                return fail("no-host-tier", idx,
+                            f"{kind} a^{i}: chain has no host tier")
             if not (0 <= i <= L):
-                return SimResult(False, t, peak, f"{kind}: bad activation {i}")
+                return fail("bad-stage", idx, f"{kind}: bad activation {i}")
             w = float(chain.wa[i])
             if kind == F_OFF:
                 if ("a", i) not in live:
-                    return SimResult(False, t, peak,
-                                     f"Foff: a^{i} not live as a bare "
-                                     f"activation")
+                    return fail("offload-not-bare", idx,
+                                f"Foff: a^{i} not live as a bare activation")
                 if i in host_copies:
-                    return SimResult(False, t, peak,
-                                     f"Foff: a^{i} already offloaded")
+                    return fail("double-offload", idx,
+                                f"Foff: a^{i} already offloaded")
                 # async launch: zero compute time, lands later; host memory is
                 # charged from launch.  The device copy stays (it is consumed
                 # by the following F_∅/B); the checkpoint obligation moves to
@@ -214,23 +239,23 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 host_mem += w
                 host_peak = max(host_peak, host_mem)
                 if host_mem_limit is not None and host_mem > host_mem_limit + 1e-9:
-                    return SimResult(False, t, peak,
-                                     f"Foff: host mem {host_mem} > limit "
-                                     f"{host_mem_limit}", host_peak_mem=host_peak)
+                    return fail("host-budget", idx,
+                                f"Foff: host mem {host_mem} > limit "
+                                f"{host_mem_limit}", host_peak_mem=host_peak)
                 ckpt.discard(("a", i))
             else:  # PREFETCH
                 if i not in host_copies:
-                    return SimResult(False, t, peak,
-                                     f"Prefetch: a^{i} has no host copy")
+                    return fail("prefetch-no-copy", idx,
+                                f"Prefetch: a^{i} has no host copy")
                 if ("a", i) in live:
-                    return SimResult(False, t, peak,
-                                     f"Prefetch: a^{i} already on device")
+                    return fail("prefetch-resident", idx,
+                                f"Prefetch: a^{i} already on device")
                 during = mem + w
                 peak = max(peak, during)
                 if mem_limit is not None and during > mem_limit + 1e-9:
-                    return SimResult(False, t, peak,
-                                     f"Prefetch: mem {during} > limit "
-                                     f"{mem_limit}", host_peak_mem=host_peak)
+                    return fail("device-budget", idx,
+                                f"Prefetch: mem {during} > limit "
+                                f"{mem_limit}", host_peak_mem=host_peak)
                 t0 = t
                 t = max(t, off_done.get(i, t)) + chain.host.prefetch_time(w)
                 stall += t - t0
@@ -245,10 +270,11 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
         l = int(arg)  # stage index, 1..L+1
         if kind in _FORWARD_KINDS:
             if not (1 <= l <= L + 1):
-                return SimResult(False, t, peak, f"bad stage {l}")
+                return fail("bad-stage", idx, f"bad stage {l}")
             ok, src = has_input_act(l - 1)
             if not ok:
-                return SimResult(False, t, peak, f"{kind}^{l}: a^{l-1} not live")
+                return fail("missing-input", idx,
+                            f"{kind}^{l}: a^{l-1} not live")
             out: Item = ("abar", l) if kind == F_ALL else ("a", l)
             if kind != F_ALL and l == L + 1:
                 # the loss output is a scalar; modelled as a^{L+1} of size 0,
@@ -258,8 +284,8 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
             during = mem + new_bytes + float(chain.of[l - 1])
             peak = max(peak, during)
             if mem_limit is not None and during > mem_limit + 1e-9:
-                return SimResult(False, t, peak,
-                                 f"{kind}^{l}: mem {during} > limit {mem_limit}")
+                return fail("device-budget", idx,
+                            f"{kind}^{l}: mem {during} > limit {mem_limit}")
             t += float(chain.uf[l - 1])
             # commit: maybe consume input, add output
             if kind == F_NONE and src == ("a", l - 1):
@@ -278,19 +304,20 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 ckpt.add(out)
         elif kind == BWD:
             if not (1 <= l <= L + 1):
-                return SimResult(False, t, peak, f"bad stage {l}")
-            need = [("delta", l), ("abar", l)]
-            for item in need:
+                return fail("bad-stage", idx, f"bad stage {l}")
+            need = [(("delta", l), "missing-grad"),
+                    (("abar", l), "missing-residual")]
+            for item, vkind in need:
                 if item not in live:
-                    return SimResult(False, t, peak, f"B^{l}: {item} not live")
+                    return fail(vkind, idx, f"B^{l}: {item} not live")
             ok, src = has_input_act(l - 1)
             if not ok:
-                return SimResult(False, t, peak, f"B^{l}: a^{l-1} not live")
+                return fail("missing-input", idx, f"B^{l}: a^{l-1} not live")
             during = mem + float(chain.ob[l - 1])
             peak = max(peak, during)
             if mem_limit is not None and during > mem_limit + 1e-9:
-                return SimResult(False, t, peak,
-                                 f"B^{l}: mem {during} > limit {mem_limit}")
+                return fail("device-budget", idx,
+                            f"B^{l}: mem {during} > limit {mem_limit}")
             t += float(chain.ub[l - 1])
             # consume δ^l, ā^l, and a^{l-1} (unless provided by ā^{l-1})
             for item in (("delta", l), ("abar", l)):
@@ -306,21 +333,42 @@ def simulate(chain: Chain, schedule: Schedule, mem_limit: float | None = None,
                 live[out] = True
                 mem += _size(chain, out)
         else:
-            return SimResult(False, t, peak, f"unknown op kind {kind}")
+            return fail("bad-op", idx, f"unknown op kind {kind}")
         _rec(kind, l, t_op, t)
 
     if ("delta", 0) not in live:
-        return SimResult(False, t, peak, "schedule did not produce δ^0")
+        return fail("no-output", -1, "schedule did not produce δ^0")
     if track_checkpoint_persistence and not persistent:
-        return SimResult(False, t, peak, "non-persistent", final_mem=mem,
-                         host_peak_mem=host_peak, transfer_stall=stall)
+        return fail("non-persistent", -1, "non-persistent", final_mem=mem,
+                    host_peak_mem=host_peak, transfer_stall=stall)
     return SimResult(True, t, peak, final_mem=mem, host_peak_mem=host_peak,
                      transfer_stall=stall)
 
 
+class ScheduleViolationError(AssertionError):
+    """``assert_valid`` failure carrying the structured
+    :class:`repro.check.violations.Violation` the simulator hit — the same
+    type the static verifier reports, so dynamic and static checks are
+    interchangeable oracles."""
+
+    def __init__(self, violation):
+        self.violation = violation
+        # violation.message already carries op position + residency summary
+        super().__init__(
+            f"invalid schedule [{violation.kind}]: {violation.message}")
+
+
 def assert_valid(chain: Chain, schedule: Schedule,
                  mem_limit: float | None = None) -> SimResult:
+    """Simulate and raise :class:`ScheduleViolationError` (an
+    ``AssertionError``) on any validity failure.  This is the thin dynamic
+    cross-check of the static pass in ``repro.check.schedule_verifier``."""
     res = simulate(chain, schedule, mem_limit)
     if not res.valid:
-        raise AssertionError(f"invalid schedule: {res.error}")
+        from ..check.violations import Violation  # lazy: no import cycle
+        op = (schedule.ops[res.error_index]
+              if 0 <= res.error_index < len(schedule.ops) else None)
+        raise ScheduleViolationError(Violation(
+            kind=res.error_kind or "bad-op", message=res.error,
+            op_index=res.error_index, op=op, state=res.error_state))
     return res

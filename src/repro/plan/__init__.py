@@ -23,6 +23,7 @@ remain available through the thin shim in :mod:`repro.core.policies`, which
 maps each string onto exactly one ``PlanRequest``.
 """
 
+from ..check import PlanVerificationError
 from .api import (SweepPoint, build_plan, min_memory_plan, sweep,
                   two_tier_fallback)
 from .compat import (DOCUMENTED_POLICIES, policy_to_request, resolve_policy)
@@ -34,6 +35,7 @@ from .request import (DEFAULT_NUM_SLOTS, Budget, PlanRequest, parse_size,
 __all__ = [
     "Budget", "PlanRequest", "MemoryPlan", "BoundPlan", "SweepPoint",
     "SolverEntry", "InfeasiblePlanError", "StalePlanError",
+    "PlanVerificationError",
     "build_plan", "sweep", "min_memory_plan", "two_tier_fallback",
     "register_solver", "solver_for", "available_solvers", "parse_size",
     "policy_to_request", "resolve_policy", "DOCUMENTED_POLICIES",

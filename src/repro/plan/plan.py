@@ -163,6 +163,74 @@ class MemoryPlan:
                      f"{'eager offload (host DMA)' if self.uses_offload else 'jitted nested remat'}")
         return "\n".join(lines)
 
+    # -- static verification ----------------------------------------------
+
+    def verify(self, max_violations: int = 64):
+        """Statically verify the plan's schedule against the liveness /
+        offload-protocol / budget rules (:mod:`repro.check`); returns a
+        :class:`~repro.check.VerificationReport`.
+
+        Runs without executing anything: the abstract interpreter in
+        ``check.schedule_verifier`` proves every backward has its required
+        state, nothing is used after free, the offload protocol is
+        respected, and (when the plan carries a profiled chain and budget)
+        the symbolic device peak stays within ``budget_bytes``.  For
+        solver-backed two-tier plans the slot-discretized accounting is
+        additionally re-checked against the solver's slot budget.
+
+        ``save``/``load`` call this unconditionally and raise
+        :class:`~repro.check.PlanVerificationError`; ``bind``/``execute``
+        call it when ``REPRO_CHECK=1`` is set in the environment.
+        """
+        from ..check import verify_schedule, verify_slot_discipline
+        report = verify_schedule(
+            self.schedule, chain=self.chain,
+            device_budget=self.budget_bytes,
+            max_violations=max_violations)
+        if (self.chain is not None and self.solution is not None
+                and self.budget_bytes is not None
+                and self.request.strategy == "optimal"
+                and not self.uses_offload):
+            # re-quantizing against the plan budget is only sound for the
+            # budget-driven two-tier solver (min-memory/offload solvers
+            # discretize against a different reference scale)
+            report.merge(verify_slot_discipline(
+                self.schedule, self.chain, self.budget_bytes,
+                self.request.resolved_num_slots,
+                max_violations=max_violations))
+        if (report.ok and self.chain is not None
+                and self.expected_time == self.expected_time):  # not NaN
+            report.merge(self._verify_metadata())
+        return report
+
+    def _verify_metadata(self):
+        """Cross-check the plan's stored makespan/peaks against the float64
+        cost model: a corruption that leaves the schedule *valid* but
+        changes its behavior (e.g. a duplicated forward — correct result,
+        different cost) still fails verification, because the numbers the
+        plan advertises no longer describe the schedule it carries."""
+        from ..check import VerificationReport, Violation
+        res = simulate(self.chain, self.schedule)
+        report = VerificationReport(rules=["metadata"])
+
+        def drift(name, stored, got):
+            if abs(got - stored) > 1e-9 * max(1.0, abs(stored)):
+                report.violations.append(Violation(
+                    kind="metadata-drift",
+                    message=f"stored {name} {stored!r} but the schedule "
+                            f"simulates to {got!r}"))
+
+        drift("expected_time", self.expected_time, res.time)
+        drift("peak_device_mem", self.peak_device_mem, res.peak_mem)
+        drift("peak_host_mem", self.peak_host_mem, res.host_peak_mem)
+        return report
+
+    def _verify_or_raise(self, context: str) -> None:
+        report = self.verify()
+        if not report.ok:
+            from ..check import PlanVerificationError
+            raise PlanVerificationError(report, context=context)
+
     # -- execution ---------------------------------------------------------
 
     def bind(self, stages: Sequence[Callable],
@@ -179,6 +247,8 @@ class MemoryPlan:
         :func:`repro.obs.drift.compare`.  The untraced jitted fast path is
         untouched; tracing trades its fusion for per-op visibility (the
         binding reports ``jittable == False`` while traced)."""
+        if os.environ.get("REPRO_CHECK") == "1":
+            self._verify_or_raise("refusing to bind an invalid plan")
         return BoundPlan(self, list(stages), checkpoint_policy, tracer=tracer)
 
     def execute(self, stages: Sequence[Callable], params: Sequence[Any],
@@ -187,6 +257,8 @@ class MemoryPlan:
         (host copies included); returns ``(out, param_grads, input_grad)``.
         Pass ``tracer=`` (a :class:`repro.obs.trace.Tracer`) to record one
         span per executed op."""
+        if os.environ.get("REPRO_CHECK") == "1":
+            self._verify_or_raise("refusing to execute an invalid plan")
         from ..core.executor import execute_schedule
         return execute_schedule(self.schedule, stages, params, x, **kwargs)
 
@@ -214,7 +286,10 @@ class MemoryPlan:
 
     def save(self, path: str) -> None:
         """Serialize the plan (header + pickle).  The header embeds the chain
-        content hash so :meth:`load` can refuse a mismatched chain."""
+        content hash so :meth:`load` can refuse a mismatched chain.  The
+        plan is statically verified first — a corrupted schedule never
+        reaches disk (:class:`~repro.check.PlanVerificationError`)."""
+        self._verify_or_raise(f"refusing to save invalid plan to {path!r}")
         payload = (_PLAN_MAGIC, _PLAN_VERSION, self.chain_hash, self)
         limit = sys.getrecursionlimit()
         tmp = f"{path}.tmp.{os.getpid()}"
@@ -236,7 +311,10 @@ class MemoryPlan:
     def load(path: str, chain: Optional[Chain] = None) -> "MemoryPlan":
         """Load a saved plan.  With ``chain`` given, the plan is validated
         against it (:class:`StalePlanError` on mismatch) — always pass the
-        chain you are about to execute on."""
+        chain you are about to execute on.  The deserialized schedule is
+        statically re-verified (a truncated or hand-edited plan file fails
+        with :class:`~repro.check.PlanVerificationError`, not a crash at
+        execution time)."""
         with open(path, "rb") as f:
             payload = pickle.load(f)
         try:
@@ -252,6 +330,7 @@ class MemoryPlan:
             raise ValueError(f"{path!r} does not contain a MemoryPlan")
         if chain is not None:
             plan.validate_chain(chain)
+        plan._verify_or_raise(f"loaded plan {path!r} fails verification")
         return plan
 
 

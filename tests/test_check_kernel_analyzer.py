@@ -1,0 +1,135 @@
+"""Kernel analyzer (`repro.check.kernel_analyzer`) tests.
+
+The analyzer must machine-check the shipped ``kernels/dp_fill`` Pallas
+kernels clean — replacing the hand proof in ``ops.py`` that padded-slice
+garbage rows are always rewritten by their own band before any read — while
+flagging each of the seeded defects in ``tests/fixtures/badkernels.py``
+(race, out-of-bounds, missing accumulator init, aliasing grid map).
+
+It also pins the *contract* the analyzer mirrors from ``ops._FusedOperands``
+(row pad, vector length, band offsets): if the driver layout changes without
+the analyzer following, these tests fail before the analyzer silently
+checks the wrong shapes.
+"""
+
+import os
+
+import numpy as np
+
+from repro.check.kernel_analyzer import (
+    DEFAULT_FUSED_CASES,
+    FusedCase,
+    _fused_contract,
+    analyze_band_kernel,
+    analyze_dp_fill,
+    analyze_fused_kernel,
+    cache_key,
+    dp_fill_kernel_path,
+)
+from repro.core.solver_cache import code_fingerprint
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "badkernels.py")
+
+
+# -- shipped kernels are clean -----------------------------------------------
+
+
+def test_shipped_dp_fill_kernels_analyze_clean():
+    issues = analyze_dp_fill()
+    assert issues == [], "\n".join(str(i) for i in issues)
+
+
+def test_no_unsupported_constructs_in_shipped_kernels():
+    """The analyzer models every construct the shipped kernels use — an
+    `unsupported` issue would mean the gate silently stopped proving."""
+    issues = analyze_dp_fill()
+    assert not [i for i in issues if i.kind == "unsupported"]
+
+
+def test_cache_key_is_code_fingerprint():
+    assert cache_key() == code_fingerprint()
+
+
+# -- contract mirroring ------------------------------------------------------
+
+
+def test_fused_contract_matches_ops_driver():
+    for L, BR in [(1, 1), (3, 2), (5, 3)]:
+        case = FusedCase(L=L, BR=BR)
+        contract = _fused_contract(case)
+        sizes = [L + 1 - d for d in range(L + 1)]
+        off = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        assert list(off) == contract["off"]
+        ncells = int(off[-1])
+        assert contract["ncells"] == ncells
+        assert contract["nrows"] == ncells + 2 * L + BR
+        assert contract["vec"] == 2 * L + BR + 2
+        assert contract["rt"] == -(-max(L, 1) // BR)
+
+
+def test_default_cases_cover_uneven_tiles():
+    """The case matrix must include L not divisible by BR — that is where
+    pad lanes write garbage past the band and the proof has content."""
+    assert any(c.L % c.BR for c in DEFAULT_FUSED_CASES if c.BR > 1)
+    assert any(c.allow_fall for c in DEFAULT_FUSED_CASES)
+    assert any(not c.allow_fall for c in DEFAULT_FUSED_CASES)
+
+
+# -- seeded defects are flagged ----------------------------------------------
+
+
+def _kinds(issues):
+    return {i.kind for i in issues}
+
+
+def test_racy_fused_fixture_flagged():
+    issues = analyze_fused_kernel(FIXTURES, "_racy_fused_kernel")
+    assert issues, "race fixture analyzed clean"
+    assert "final-invalid" in _kinds(issues)
+
+
+def test_oob_fused_fixture_flagged():
+    issues = analyze_fused_kernel(FIXTURES, "_oob_fused_kernel")
+    assert "out-of-bounds" in _kinds(issues)
+
+
+def test_racy_band_fixture_flagged():
+    issues = analyze_band_kernel(FIXTURES, "band_racy", "_racy_band_kernel")
+    assert issues, "missing-init fixture analyzed clean"
+    assert "final-invalid" in _kinds(issues)
+
+
+def test_alias_band_fixture_flagged():
+    issues = analyze_band_kernel(FIXTURES, "band_alias",
+                                 "_alias_band_kernel")
+    assert "grid-race" in _kinds(issues)
+
+
+def test_missing_kernel_reports_unsupported():
+    issues = analyze_fused_kernel(FIXTURES, "_no_such_kernel")
+    assert [i.kind for i in issues] == ["unsupported"]
+
+
+# -- the gate ----------------------------------------------------------------
+
+
+def test_check_main_gate_passes(tmp_path, monkeypatch):
+    """`python -m repro.check` (the CI job) exits 0 on the current tree and
+    re-uses the fingerprint stamp on the second run."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(dp_fill_kernel_path()),
+                                     "..", "..", "..")
+    env["XDG_CACHE_HOME"] = str(tmp_path)
+    first = subprocess.run(
+        [sys.executable, "-m", "repro.check", "--force"],
+        capture_output=True, text=True, env=env)
+    assert first.returncode == 0, first.stdout + first.stderr
+    second = subprocess.run(
+        [sys.executable, "-m", "repro.check"],
+        capture_output=True, text=True, env=env)
+    assert second.returncode == 0
+    assert "cached ok" in second.stdout

@@ -1,0 +1,260 @@
+"""Repo-invariant linter (`repro.check.lint`) tests + the jax-free import
+guard.
+
+Two halves:
+
+- unit tests of the three lint rules against synthetic trees written to
+  ``tmp_path`` (so the expectations are explicit, not inherited from
+  whatever the live tree happens to contain), plus ``lint_repo() == []`` on
+  the shipped tree — the same gate CI runs via ``python -m repro.check``;
+- the *dynamic* side of the jax-import rule: a subprocess with ``jax`` /
+  ``jaxlib`` blocked at the meta-path level must still import
+  ``repro.core``, ``repro.obs.metrics``, ``repro.obs.trace`` and
+  ``repro.check``, run a solve, and fail only (and cleanly) when touching a
+  lazy jax-side export.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.check import LintViolation, lint_repo
+from repro.check.lint import lint_file, lint_paths
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _lint_snippet(tmp_path, rel, code):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    return lint_file(str(path), str(tmp_path))
+
+
+# -- the shipped tree is clean -----------------------------------------------
+
+
+def test_lint_repo_clean():
+    violations = lint_repo()
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+# -- jax-import rule ---------------------------------------------------------
+
+
+def test_module_level_jax_import_flagged(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/foo.py", """
+        import jax
+    """)
+    assert [v.rule for v in vs] == ["jax-import"]
+    assert vs[0].line == 2
+
+
+def test_function_local_jax_import_allowed(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/foo.py", """
+        def f():
+            import jax
+            return jax
+    """)
+    assert vs == []
+
+
+def test_type_checking_guard_allowed(tmp_path):
+    vs = _lint_snippet(tmp_path, "obs/foo.py", """
+        from typing import TYPE_CHECKING
+        if TYPE_CHECKING:
+            import jax
+    """)
+    assert vs == []
+
+
+def test_try_guarded_jax_import_still_flagged(tmp_path):
+    # a try/except around the import does not make it lazy
+    vs = _lint_snippet(tmp_path, "core/foo.py", """
+        try:
+            import jaxlib
+        except ImportError:
+            jaxlib = None
+    """)
+    assert [v.rule for v in vs] == ["jax-import"]
+
+
+def test_jax_boundary_modules_exempt(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/executor.py", """
+        import jax
+    """)
+    assert vs == []
+
+
+def test_relative_import_of_boundary_module_flagged(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/foo.py", """
+        from . import executor
+    """)
+    assert [v.rule for v in vs] == ["jax-import"]
+
+
+def test_transitive_repro_jax_module_flagged(tmp_path):
+    vs = _lint_snippet(tmp_path, "check/foo.py", """
+        from repro.core.executor import execute_schedule
+    """)
+    assert [v.rule for v in vs] == ["jax-import"]
+
+
+def test_outside_scope_modules_unconstrained(tmp_path):
+    vs = _lint_snippet(tmp_path, "kernels/foo.py", """
+        import jax
+    """)
+    assert vs == []
+
+
+# -- policy-parse rule -------------------------------------------------------
+
+
+def test_policy_prefix_parse_flagged_outside_compat(tmp_path):
+    vs = _lint_snippet(tmp_path, "plan/plan.py", """
+        def f(policy):
+            if policy.startswith("periodic:"):
+                return 1
+    """)
+    assert [v.rule for v in vs] == ["policy-parse"]
+
+
+def test_policy_prefix_tuple_flagged(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/solver.py", """
+        def f(policy):
+            return policy.startswith(("optimal", "revolve:"))
+    """)
+    assert [v.rule for v in vs] == ["policy-parse"]
+
+
+def test_policy_parse_allowed_in_compat(tmp_path):
+    vs = _lint_snippet(tmp_path, "plan/compat.py", """
+        def f(policy):
+            if policy.startswith("periodic:"):
+                return 1
+    """)
+    assert vs == []
+
+
+def test_unrelated_startswith_allowed(tmp_path):
+    vs = _lint_snippet(tmp_path, "plan/plan.py", """
+        def f(name):
+            return name.startswith("repro.")
+    """)
+    assert vs == []
+
+
+# -- metric-name rule --------------------------------------------------------
+
+
+def test_bad_metric_name_flagged(tmp_path):
+    vs = _lint_snippet(tmp_path, "obs/foo.py", """
+        def f(metrics):
+            metrics.counter("SolverCacheHits")
+    """)
+    assert [v.rule for v in vs] == ["metric-name"]
+
+
+def test_dotted_metric_name_allowed(tmp_path):
+    vs = _lint_snippet(tmp_path, "obs/foo.py", """
+        def f(metrics):
+            metrics.counter("solver_cache.hits")
+            metrics.gauge("plan.peak_device_bytes", 2)
+    """)
+    assert vs == []
+
+
+def test_fstring_metric_name_placeholders_substituted(tmp_path):
+    # placeholders become "x" — still must land in noun.verb shape
+    vs = _lint_snippet(tmp_path, "obs/foo.py", """
+        def f(metrics, stage):
+            metrics.histogram(f"stage.{stage}.seconds", 1.0)
+            metrics.counter(f"{stage}")
+    """)
+    assert [v.rule for v in vs] == ["metric-name"]
+    assert vs[0].line == 4
+
+
+def test_imported_metric_fn_checked(tmp_path):
+    vs = _lint_snippet(tmp_path, "obs/foo.py", """
+        from repro.obs.metrics import counter
+
+        def f():
+            counter("BadName")
+    """)
+    assert [v.rule for v in vs] == ["metric-name"]
+
+
+def test_lint_paths_sorts_and_aggregates(tmp_path):
+    a = tmp_path / "core" / "a.py"
+    b = tmp_path / "core" / "b.py"
+    a.parent.mkdir(parents=True)
+    a.write_text("import jax\n")
+    b.write_text("import jaxlib\n")
+    vs = lint_paths([str(b), str(a)], str(tmp_path))
+    assert [v.path for v in vs] == ["core/a.py", "core/b.py"]
+    assert all(isinstance(v, LintViolation) for v in vs)
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/foo.py", """
+        def f(:
+    """)
+    assert [v.rule for v in vs] == ["syntax"]
+
+
+# -- jax-blocked import guard (dynamic side of the jax-import rule) ----------
+
+
+_JAX_BLOCKED_PROBE = """
+import sys
+
+class _Blocker:
+    ROOTS = ("jax", "jaxlib")
+    def find_module(self, name, path=None):
+        return self.find_spec(name, path)
+    def find_spec(self, name, path=None, target=None):
+        if name.split(".")[0] in self.ROOTS:
+            raise ImportError(f"jax blocked for this test: {name}")
+        return None
+
+sys.meta_path.insert(0, _Blocker())
+
+# the numpy-only surface must import and work
+import repro.core
+import repro.obs.metrics
+import repro.obs.trace
+import repro.check
+from repro.core.chain import Chain
+from repro.core.solver import solve_optimal
+
+ch = Chain.homogeneous(4)
+sol = solve_optimal(ch, ch.store_all_peak() * 0.7, num_slots=16,
+                    impl="banded", cache=False)
+assert sol.feasible and sol.schedule is not None
+rep = repro.check.verify_schedule(sol.schedule, chain=ch,
+                                  device_budget=ch.store_all_peak() * 0.7)
+assert rep.ok, rep.summary()
+
+# lazy jax-side exports must fail *cleanly* (ImportError at the boundary,
+# not an AttributeError or a partial import)
+try:
+    repro.core.execute_schedule
+except ImportError:
+    pass
+else:
+    raise SystemExit("execute_schedule imported with jax blocked")
+
+print("JAX-FREE-OK")
+"""
+
+
+def test_core_obs_check_import_with_jax_blocked():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", _JAX_BLOCKED_PROBE],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "JAX-FREE-OK" in proc.stdout

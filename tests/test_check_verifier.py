@@ -1,0 +1,310 @@
+"""Static schedule verifier (`repro.check.schedule_verifier`) tests.
+
+Three layers:
+
+- **equivalence**: `verify_schedule` must agree with the float64 simulator
+  (`simulate(...).valid ⟺ report.ok`, first violation kind == the
+  simulator's `error_kind`) on every solver-produced schedule in the matrix
+  (two-tier + offload, all DP impls, baselines) — plus a hypothesis
+  property over random chains when the `test` extra is installed;
+- **mutation**: ≥95% of single-op corruptions (drop / duplicate / swap /
+  index-shift) of valid solver schedules must be rejected, with the
+  verifier and simulator agreeing on validity and on the violation kind;
+- **wiring**: `MemoryPlan.verify` passes on every built plan, `save`/`load`
+  refuse corrupted plans, `REPRO_CHECK=1` gates `bind`/`execute`, and
+  `assert_valid` raises a structured `ScheduleViolationError` carrying the
+  same `Violation` (op index + residency summary) the verifier reports.
+"""
+
+import dataclasses
+import os
+import re
+
+import numpy as np
+import pytest
+
+from repro.check import (
+    PlanVerificationError,
+    VIOLATION_KINDS,
+    verify_schedule,
+    verify_slot_discipline,
+)
+from repro.core import baselines
+from repro.core.chain import Chain, HostTransferModel
+from repro.core.schedule import (
+    Schedule,
+    ScheduleViolationError,
+    assert_valid,
+    simulate,
+)
+from repro.core.solver import solve_min_memory, solve_optimal
+from repro.offload.solver import solve_optimal_offload
+from repro.plan import Budget, MemoryPlan, PlanRequest, build_plan
+
+from helpers import random_chain
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover — CI always installs the test extra
+    HAVE_HYPOTHESIS = False
+
+
+def _host_chain(rng, max_len=5):
+    ch = random_chain(rng, max_len=max_len)
+    return ch.with_host(HostTransferModel(bandwidth_d2h=2.0))
+
+
+def _assert_equivalent(chain, schedule, budget=None):
+    sim = simulate(chain, schedule, budget)
+    rep = verify_schedule(schedule, chain=chain, device_budget=budget)
+    assert sim.valid == rep.ok, (
+        f"simulator says valid={sim.valid} ({sim.error}), verifier says "
+        f"{rep.summary()}")
+    if not sim.valid:
+        assert rep.first_kind == sim.error_kind, (
+            rep.first_kind, sim.error_kind, sim.error)
+    return sim, rep
+
+
+# -- equivalence over the solver matrix --------------------------------------
+
+
+@pytest.mark.parametrize("prune", ["1", "0"])
+@pytest.mark.parametrize("impl", ["banded", "reference"])
+@pytest.mark.parametrize("seed", range(4))
+def test_two_tier_solver_schedules_verify(seed, impl, prune, monkeypatch):
+    monkeypatch.setenv("REPRO_DP_PRUNE", prune)
+    rng = np.random.default_rng(seed)
+    ch = random_chain(rng, max_len=5)
+    peak = ch.store_all_peak()
+    for frac in (0.5, 0.75, 1.0):
+        for S in (13, 40):
+            sol = solve_optimal(ch, peak * frac, num_slots=S, impl=impl,
+                                cache=False)
+            if not sol.feasible or sol.schedule is None:
+                continue
+            sim, _ = _assert_equivalent(ch, sol.schedule, peak * frac)
+            assert sim.valid, sim.error
+            rep = verify_slot_discipline(sol.schedule, ch, peak * frac, S)
+            assert rep.ok, rep.summary()
+
+
+@pytest.mark.parametrize("impl", ["pallas", "pallas_fused"])
+def test_pallas_impl_schedules_verify(impl):
+    rng = np.random.default_rng(3)
+    ch = random_chain(rng, max_len=3)
+    peak = ch.store_all_peak()
+    sol = solve_optimal(ch, peak * 0.75, num_slots=12, impl=impl,
+                        cache=False)
+    assert sol.feasible and sol.schedule is not None
+    sim, _ = _assert_equivalent(ch, sol.schedule, peak * 0.75)
+    assert sim.valid, sim.error
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_offload_solver_schedules_verify(seed):
+    rng = np.random.default_rng(100 + seed)
+    ch = _host_chain(rng)
+    peak = ch.store_all_peak()
+    for frac in (0.45, 0.6, 0.8):
+        sol = solve_optimal_offload(ch, peak * frac, num_slots=24,
+                                    cache=False)
+        if not sol.feasible or sol.schedule is None:
+            continue
+        sim, _ = _assert_equivalent(ch, sol.schedule, peak * frac)
+        assert sim.valid, sim.error
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_min_memory_and_baseline_schedules_verify(seed):
+    rng = np.random.default_rng(200 + seed)
+    ch = random_chain(rng, max_len=5)
+    scheds = [solve_min_memory(ch, cache=False).schedule,
+              Schedule.store_all(ch.length),
+              baselines.periodic(ch, max(1, ch.length // 2)),
+              baselines.chen_sqrt(ch)]
+    for sched in scheds:
+        if sched is None:
+            continue
+        sim, _ = _assert_equivalent(ch, sched)
+        assert sim.valid, sim.error
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def chain_and_budget(draw):
+        L = draw(st.integers(min_value=1, max_value=5))
+        n = L + 1
+        ints = st.lists(st.integers(1, 5), min_size=n, max_size=n)
+        ch = Chain.make(
+            uf=[float(x) for x in draw(ints)],
+            ub=[float(x) for x in draw(ints)],
+            wa=[float(x) for x in draw(ints)],
+            wabar=[float(x) for x in draw(ints)],
+        )
+        if draw(st.booleans()):
+            ch = ch.with_host(HostTransferModel(
+                bandwidth_d2h=float(draw(st.integers(1, 4)))))
+        frac = draw(st.sampled_from([0.5, 0.7, 0.9, 1.0]))
+        return ch, frac
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(chain_and_budget())
+    def test_every_solver_plan_verifies(cb):
+        """Property: every feasible plan the planning API produces passes
+        MemoryPlan.verify() — two-tier and offload tiers alike."""
+        ch, frac = cb
+        tiers = (("device", "host") if ch.host is not None
+                 else ("device",))
+        try:
+            plan = build_plan(
+                PlanRequest(budget=Budget.fraction(frac), tiers=tiers,
+                            num_slots=20), ch)
+        except MemoryError:
+            return
+        rep = plan.verify()
+        assert rep.ok, rep.summary()
+
+
+# -- mutation suite ----------------------------------------------------------
+
+
+def _mutations(rng, ops, n_per_kind=None):
+    """Single-op corruptions of an op list: drop, duplicate, swap with the
+    next op, shift a stage index."""
+    out = []
+    idxs = range(len(ops))
+    for i in idxs:
+        out.append(("drop", ops[:i] + ops[i + 1:]))
+        out.append(("dup", ops[:i] + [ops[i]] + ops[i:]))
+    for i in range(len(ops) - 1):
+        if ops[i] != ops[i + 1]:
+            swapped = list(ops)
+            swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+            out.append(("swap", swapped))
+    for i in idxs:
+        kind, arg = ops[i]
+        if isinstance(arg, int):
+            shifted = list(ops)
+            shifted[i] = (kind, arg + int(rng.choice([-1, 1])))
+            out.append(("shift", shifted))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_mutation_suite_rejects_corruptions(seed):
+    """≥95% of single-op corruptions of a solved plan fail
+    MemoryPlan.verify() — via the liveness/budget walk for semantically
+    broken schedules, via the metadata cross-check for valid-but-different
+    ones (e.g. a duplicated forward).  The schedule-level verifier must
+    stay check-for-check equivalent to the simulator throughout."""
+    rng = np.random.default_rng(300 + seed)
+    total = rejected = 0
+    for draw in range(4):
+        ch = random_chain(rng, max_len=4)
+        try:
+            plan = build_plan(
+                PlanRequest(budget=Budget.fraction(0.6), num_slots=25), ch)
+        except MemoryError:
+            plan = build_plan(PlanRequest(strategy="min_memory"), ch)
+        sched = plan.schedule
+        budget = plan.budget_bytes
+        assert plan.verify().ok
+        for tag, ops in _mutations(rng, list(sched.ops)):
+            bad_sched = Schedule(ops=ops, length=sched.length)
+            total += 1
+            sim = simulate(ch, bad_sched, budget)
+            rep = verify_schedule(bad_sched, chain=ch, device_budget=budget)
+            # verifier and simulator must agree op-for-op — on validity
+            # and, when invalid, on the violation kind
+            assert sim.valid == rep.ok, (tag, sim.error, rep.summary())
+            if not rep.ok:
+                assert rep.first_kind == sim.error_kind, (
+                    tag, rep.first_kind, sim.error_kind)
+                assert rep.first_kind in VIOLATION_KINDS
+            plan_rep = dataclasses.replace(plan, schedule=bad_sched).verify()
+            if not plan_rep.ok:
+                rejected += 1
+    assert total > 40
+    assert rejected / total >= 0.95, (
+        f"only {rejected}/{total} corruptions rejected")
+
+
+def test_violation_carries_op_index_and_residency():
+    """Satellite: validation errors carry the op position and a short
+    residency summary, in both the simulator string and the Violation."""
+    ch = Chain.homogeneous(3)
+    sched = solve_min_memory(ch, cache=False).schedule
+    ops = list(sched.ops)
+    # drop the first backward's gradient producer: find a B op and damage it
+    b_at = next(i for i, (k, _) in enumerate(ops) if k == "B")
+    del ops[b_at]
+    bad = Schedule(ops=ops, length=sched.length)
+    sim = simulate(ch, bad)
+    assert not sim.valid
+    assert sim.error_index >= 0
+    assert f"at op[{sim.error_index}]" in sim.error
+    assert sim.error_state  # residency summary, e.g. "dev a{0} δ{4} | ..."
+    rep = verify_schedule(bad, chain=ch)
+    v = rep.violations[0]
+    assert v.kind == sim.error_kind
+    assert v.op_index == sim.error_index
+    assert v.state
+    with pytest.raises(ScheduleViolationError) as exc:
+        assert_valid(ch, bad)
+    assert exc.value.violation.kind == sim.error_kind
+    assert re.search(r"at op\[\d+\]", str(exc.value))
+
+
+# -- plan wiring -------------------------------------------------------------
+
+
+def _plan(seed=5, frac=0.7):
+    rng = np.random.default_rng(seed)
+    for _ in range(10):
+        ch = random_chain(rng, max_len=4)
+        try:
+            return build_plan(
+                PlanRequest(budget=Budget.fraction(frac),
+                            num_slots=24), ch), ch
+        except MemoryError:
+            continue
+    raise AssertionError("no feasible draw in 10 tries")
+
+
+def test_plan_save_load_verify(tmp_path):
+    plan, ch = _plan()
+    assert plan.verify().ok
+    p = os.path.join(tmp_path, "a.plan")
+    plan.save(p)
+    loaded = MemoryPlan.load(p, ch)
+    assert loaded.verify().ok
+
+
+def test_plan_save_refuses_corrupt_schedule(tmp_path):
+    plan, _ = _plan()
+    ops = list(plan.schedule.ops)
+    del ops[len(ops) // 2]
+    bad = dataclasses.replace(
+        plan, schedule=Schedule(ops=ops, length=plan.schedule.length))
+    with pytest.raises(PlanVerificationError) as exc:
+        bad.save(os.path.join(tmp_path, "bad.plan"))
+    assert exc.value.report.violations
+
+
+def test_repro_check_gates_bind_and_execute(monkeypatch):
+    plan, _ = _plan()
+    ops = list(plan.schedule.ops)
+    del ops[len(ops) // 2]
+    bad = dataclasses.replace(
+        plan, schedule=Schedule(ops=ops, length=plan.schedule.length))
+    # without the env gate, bind does not verify (fast path untouched)
+    monkeypatch.delenv("REPRO_CHECK", raising=False)
+    bad.bind([lambda p, a: a] * bad.length)
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    with pytest.raises(PlanVerificationError):
+        bad.bind([lambda p, a: a] * bad.length)
+    with pytest.raises(PlanVerificationError):
+        bad.execute([lambda p, a: a] * bad.length, [None] * bad.length, 0.0)
