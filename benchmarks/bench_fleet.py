@@ -1,0 +1,255 @@
+"""Fleet planning benchmark: cold-vs-warm plan time through the plan store.
+
+Simulates a fleet relaunch: ``--configs`` synthetic (chain × budget) plan
+requests are resolved twice through :class:`repro.runtime.PlanService` over
+one store backend — the **cold** pass solves and admits every plan, the
+**warm** pass (fresh service, fresh process-level caches, solver-cache LRU
+cleared) answers every request from the store as a verified hit.  The
+headline is ``speedup = cold_s / warm_s`` — the committed baseline asserts
+it stays ≥ x10 (``compare_trajectory.py`` gates CI on the ``fleet`` section
+of ``BENCH_solver.json``).
+
+Also records a **warm-start frontier** interpolation: a two-point sweep at
+1.5x / 2.5x the store-all peak is persisted, then an unseen 2.0x budget is
+queried — the equal-makespan bracket answers it with **zero** DP solves
+(``frontier.query_solves == 0``, also gated).
+
+CLI (used by the CI ``store-smoke`` job, two sequential processes on one
+``shared://`` store — the second must be ≥90% cache-hot):
+
+    python -m benchmarks.bench_fleet --store shared:///tmp/fleet \\
+        --configs 200 --passes 1 --json out.json --expect-hit-rate 0.9
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import solver_cache
+from repro.core.chain import Chain
+from repro.plan import Budget, PlanRequest, sweep
+from repro.runtime import PlanService, TenantQuota
+from repro.store import ObjectStore, WarmStartFrontier, from_uri
+
+NUM_SLOTS = 300
+TENANTS = ("tenant-a", "tenant-b", "tenant-c", "tenant-d")
+
+
+def _chain(L: int, seed: int) -> Chain:
+    rng = np.random.default_rng(seed)
+    n = L + 1
+    return Chain.make(
+        uf=rng.uniform(0.5, 2.0, n),
+        ub=rng.uniform(1.0, 4.0, n),
+        wa=rng.uniform(0.5, 2.0, n),
+        wabar=rng.uniform(1.0, 4.0, n),
+    )
+
+
+def _configs(n_configs: int, n_chains: int):
+    """Deterministic fleet: ``n_chains`` distinct chains, each planned at a
+    spread of budget fractions — ``n_configs`` (chain, request, tenant)
+    triples in total."""
+    chains = [_chain(12 + 2 * (i % 12), seed=i) for i in range(n_chains)]
+    peaks = [ch.store_all_peak() for ch in chains]
+    out = []
+    for i in range(n_configs):
+        ch = chains[i % n_chains]
+        frac = 0.35 + 0.5 * ((i // n_chains) % 29) / 29.0
+        req = PlanRequest(
+            strategy="optimal",
+            budget=Budget.bytes(peaks[i % n_chains] * frac),
+            num_slots=NUM_SLOTS,
+        )
+        out.append((ch, req, TENANTS[i % len(TENANTS)]))
+    return out
+
+
+def _reset_process_caches() -> None:
+    """Drop every process-level shortcut so a pass's speed comes from the
+    plan store alone: memory-only solver cache (no disk tier doubling as a
+    warm store), cleared between passes."""
+    solver_cache.configure(directory=None)
+
+
+def _snapshot_counts() -> dict:
+    from repro.obs import metrics
+
+    snap = metrics.registry().snapshot()
+    return {k: int(v.get("count", 0)) for k, v in snap.items()}
+
+
+def _run_pass(backend, configs, label: str, emit) -> dict:
+    _reset_process_caches()
+    store = ObjectStore(backend, name="store")
+    quota = TenantQuota(max_inflight=1 << 20, max_plans=1 << 20)
+    before = _snapshot_counts()
+    t0 = time.perf_counter()
+    with PlanService(store, workers=4, default_quota=quota) as svc:
+        futures = [
+            svc.submit(ch, req, tenant=tenant) for ch, req, tenant in configs
+        ]
+        plans = [f.result() for f in futures]
+    dt = time.perf_counter() - t0
+    assert all(p is not None for p in plans)
+    after = _snapshot_counts()
+
+    def count(name):
+        return after.get(name, 0) - before.get(name, 0)
+
+    hits = count("plan_service.hits")
+    misses = count("plan_service.misses")
+    total = max(hits + misses, 1)
+    result = dict(
+        label=label,
+        seconds=round(dt, 4),
+        requests=len(configs),
+        hits=hits,
+        misses=misses,
+        hit_rate=round(hits / total, 4),
+        verify_rejects=count("plan_service.verify_rejects"),
+    )
+    emit(
+        f"# fleet pass {label}: {len(configs)} requests in {dt:.3f}s "
+        f"(hits={hits} misses={misses} hit_rate={result['hit_rate']:.0%})"
+    )
+    return result
+
+
+def _frontier_section(backend, emit) -> dict:
+    """Record a 2-point sweep, then answer an unseen bracketed budget with
+    zero DP solves (the equal-makespan interpolation fact)."""
+    _reset_process_caches()
+    store = ObjectStore(backend, name="store")
+    frontier = WarmStartFrontier(store)
+    ch = _chain(24, seed=10_007)
+    peak = ch.store_all_peak()
+    template = PlanRequest(strategy="optimal", num_slots=NUM_SLOTS)
+    # budgets clearing the store-all peak plus the worst-case slot-rounding
+    # slack: both points are feasible with the identical (recompute-free)
+    # optimal makespan, so any budget between them is answered by the
+    # bracket without touching the DP
+    sweep(
+        ch,
+        [1.5, 2.5],
+        template,
+        store_all_peak=peak,
+        frontier=frontier,
+    )
+    solves = [0]
+
+    def counting_solve(budget):
+        solves[0] += 1
+        from repro.plan import build_plan
+        import dataclasses
+
+        return build_plan(
+            dataclasses.replace(template, budget=Budget.bytes(budget)), ch
+        )
+
+    answer = frontier.query(ch, template, peak * 2.0, solve=counting_solve)
+    section = dict(
+        query_fraction=2.0,
+        query_solves=solves[0] + answer.solves,
+        source=answer.source,
+        feasible=answer.feasible,
+    )
+    emit(
+        f"# frontier query at 2.0x peak: source={answer.source} "
+        f"solves={section['query_solves']}"
+    )
+    return section
+
+
+def run(
+    backend=None,
+    configs: int = 1000,
+    chains: int = 40,
+    passes: int = 2,
+    emit=print,
+) -> dict:
+    """Cold (and optionally warm) fleet pass + the frontier interpolation
+    record; returns the machine-readable ``fleet`` section."""
+    if backend is None:
+        from repro.store import MemoryBackend
+
+        backend = MemoryBackend(capacity=1 << 20)
+    fleet = _configs(configs, chains)
+    result = dict(
+        bench="fleet",
+        configs=configs,
+        chains=chains,
+        num_slots=NUM_SLOTS,
+        passes=[],
+    )
+    cold = _run_pass(backend, fleet, "cold", emit)
+    result["passes"].append(cold)
+    if passes > 1:
+        warm = _run_pass(backend, fleet, "warm", emit)
+        result["passes"].append(warm)
+        result["cold_s"] = cold["seconds"]
+        result["warm_s"] = warm["seconds"]
+        result["speedup"] = round(
+            cold["seconds"] / max(warm["seconds"], 1e-9), 2
+        )
+        result["warm_hit_rate"] = warm["hit_rate"]
+        emit(f"# fleet speedup cold/warm: x{result['speedup']}")
+    result["frontier"] = _frontier_section(backend, emit)
+    result["hit_rate"] = result["passes"][-1]["hit_rate"]
+    return result
+
+
+def main(emit=print, small: bool = True) -> dict:
+    if small:
+        return run(configs=120, chains=12, emit=emit)
+    return run(emit=emit)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--store",
+        default=None,
+        help="store URI (memory://, file://<dir>, shared://<dir>); "
+        "default an in-process memory store",
+    )
+    ap.add_argument("--configs", type=int, default=1000)
+    ap.add_argument("--chains", type=int, default=40)
+    ap.add_argument(
+        "--passes",
+        type=int,
+        default=2,
+        choices=(1, 2),
+        help="1 = single pass (the CI smoke runs two one-pass processes)",
+    )
+    ap.add_argument("--json", default=None, help="write the fleet section")
+    ap.add_argument(
+        "--expect-hit-rate",
+        type=float,
+        default=None,
+        help="exit nonzero unless the final pass's hit rate is >= this",
+    )
+    args = ap.parse_args()
+    backend = from_uri(args.store) if args.store else None
+    res = run(
+        backend=backend,
+        configs=args.configs,
+        chains=args.chains,
+        passes=args.passes,
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.expect_hit_rate is not None:
+        rate = res["hit_rate"]
+        if rate < args.expect_hit_rate:
+            raise SystemExit(
+                f"hit rate {rate:.0%} below required "
+                f"{args.expect_hit_rate:.0%}"
+            )
+        print(f"hit rate {rate:.0%} >= {args.expect_hit_rate:.0%}")

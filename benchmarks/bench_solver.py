@@ -237,12 +237,15 @@ def write_json(result: dict, path: str = JSON_PATH) -> None:
 
 
 def main(emit=print, small: bool = True):
+    from .bench_fleet import main as fleet_main
     from .bench_prediction import drift_section
 
     if small:
         result = run(lengths=(20, 50, 100), num_slots=200, emit=emit)
         emit("# prediction drift section (repro.obs trace -> calibrate):")
         result["prediction"] = drift_section(emit=emit, small=True)
+        emit("# fleet section (cold-vs-warm plan store, frontier query):")
+        result["fleet"] = fleet_main(emit=emit, small=True)
         return result
     result = run(emit=emit)
     # Embed the CI-sized run too: the bench-trajectory job replays exactly
@@ -252,6 +255,8 @@ def main(emit=print, small: bool = True):
     result["small"] = run(lengths=(20, 50, 100), num_slots=200, emit=emit)
     emit("# prediction drift section (repro.obs trace -> calibrate):")
     result["prediction"] = drift_section(emit=emit, small=True)
+    emit("# fleet section (cold-vs-warm plan store, frontier query):")
+    result["fleet"] = fleet_main(emit=emit, small=False)
     return result
 
 

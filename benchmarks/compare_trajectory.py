@@ -47,6 +47,12 @@ CALIBRATE_FLOOR_S = 0.02
 #: loosen the gate).
 MAX_MACHINE_FACTOR = 4.0
 
+#: The fleet section's cold/warm plan-time ratio must stay at least this —
+#: a warm fleet relaunch that re-solves (or re-verifies slowly) erodes the
+#: "plan once, bind anywhere" claim.  Checked on the *current* run, so it
+#: holds on the runner itself, not just on the baseline machine.
+FLEET_MIN_SPEEDUP = 10.0
+
 _COLS = f"{'L':>5} {'slots':>6} {'impl':<16} {'base_s':>9} {'cur_s':>9}"
 HEADER = f"{_COLS} {'ratio':>7}  verdict"
 
@@ -110,6 +116,36 @@ def compare(baseline: dict, current: dict, threshold: float,
         else:
             verdict = "ok"
         print(f"{prefix} {base_s:>9.3f} {cur_s:>9.3f} {ratio:>7.2f}  {verdict}")
+    breaches += check_fleet(current.get("fleet"))
+    return breaches
+
+
+def check_fleet(fleet) -> int:
+    """Gate the ``fleet`` section: warm plan time >= x10 below cold, and the
+    frontier-interpolated budget query resolved with zero DP solves.  Absent
+    section (pre-store baselines, single-pass smoke runs) passes."""
+    if not isinstance(fleet, dict):
+        return 0
+    breaches = 0
+    speedup = fleet.get("speedup")
+    if speedup is not None:
+        verdict = "ok" if speedup >= FLEET_MIN_SPEEDUP else (
+            f"REGRESSION (< x{FLEET_MIN_SPEEDUP:g})"
+        )
+        breaches += speedup < FLEET_MIN_SPEEDUP
+        print(f"fleet: cold/warm speedup x{speedup:.2f}  {verdict}")
+    frontier = fleet.get("frontier")
+    if isinstance(frontier, dict):
+        solves = frontier.get("query_solves")
+        ok = solves == 0 and frontier.get("source") == "interpolated"
+        breaches += not ok
+        verdict = (
+            "ok"
+            if ok
+            else "REGRESSION (expected an interpolated zero-solve answer)"
+        )
+        source = frontier.get("source")
+        print(f"fleet: frontier query source={source} solves={solves}  {verdict}")
     return breaches
 
 

@@ -18,6 +18,12 @@ Enforces, as a CI gate, the invariants earlier PRs established ad-hoc:
   ``noun.verb`` registry convention (``solver_cache.hits``,
   ``train.step_seconds``); f-string names are checked with placeholders
   substituted.
+- **pickle-confinement** — raw (de)serialization modules (``pickle`` et
+  al.) may be imported only under ``store/``: every other module persists
+  through the tamper-evident :mod:`repro.store.codec` envelope, so
+  corruption handling and quarantine live in exactly one place.  Checked
+  over the whole AST (function-local imports count — laziness does not
+  make a pickle safe).
 
 The linter is purely syntactic (no imports of the linted modules), so it
 runs in any environment — including ones where importing the module under
@@ -36,7 +42,7 @@ from typing import Iterable, List, Optional
 
 # Modules that must stay importable without jax.  Paths relative to the
 # ``src/repro`` root, directory entries cover every .py directly inside.
-NUMPY_ONLY_DIRS = ("core", "obs", "check")
+NUMPY_ONLY_DIRS = ("core", "obs", "check", "store")
 # core modules that *are* the jax boundary (execution side) — exempt.
 JAX_BOUNDARY = {
     "core/executor.py",
@@ -68,6 +74,12 @@ POLICY_PREFIXES = (
     "min_memory",
 )
 POLICY_PARSE_ALLOWED = ("plan/compat.py",)
+
+# Raw (de)serialization is confined to the store package — everything else
+# reads/writes objects through the repro.store.codec envelope, so integrity
+# checks and quarantine happen in exactly one place.
+_PICKLE_MODULES = ("pickle", "cPickle", "dill", "marshal", "shelve")
+PICKLE_ALLOWED_DIRS = ("store",)
 
 # Dotted lowercase noun.verb convention for registry metric names.
 METRIC_NAME_RE = re.compile(r"^[a-z0-9_]+(\.[a-z0-9_]+)+$")
@@ -261,7 +273,38 @@ def _check_metric_names(rel: str, tree: ast.Module) -> List[LintViolation]:
     return out
 
 
-_RULES = (_check_jax_imports, _check_policy_parse, _check_metric_names)
+def _check_pickle_confinement(rel: str, tree: ast.Module) -> List[LintViolation]:
+    if rel.split("/")[0] in PICKLE_ALLOWED_DIRS:
+        return []
+    out = []
+    for node in ast.walk(tree):  # whole tree: function-local imports count
+        names: List[str] = []
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and not node.level:
+            names = [node.module or ""]
+        for name in names:
+            if name.split(".")[0] in _PICKLE_MODULES:
+                out.append(
+                    LintViolation(
+                        rel,
+                        node.lineno,
+                        "pickle-confinement",
+                        f"import of {name!r} outside store/ — all "
+                        f"(de)serialization goes through the "
+                        f"repro.store.codec envelope",
+                    )
+                )
+                break
+    return out
+
+
+_RULES = (
+    _check_jax_imports,
+    _check_policy_parse,
+    _check_metric_names,
+    _check_pickle_confinement,
+)
 
 
 # -- drivers -----------------------------------------------------------------

@@ -33,6 +33,7 @@ VIOLATION_KINDS = (
     "no-output",        # schedule ends without δ^0 live
     "non-persistent",   # a checkpointed value was dropped before its B use
     "metadata-drift",   # plan's stored makespan/peaks disagree with the model
+    "store-corrupt",    # stored plan failed the envelope/fingerprint check
 )
 
 

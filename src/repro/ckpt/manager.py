@@ -14,6 +14,13 @@ Properties required at 1000-node scale and implemented here:
   *target* sharding tree and ``device_put``s each leaf — so a checkpoint
   written on mesh A restores onto mesh B with different device counts
   (tested 8 hosts → 4 hosts in tests/test_ckpt.py).
+
+The embedded :class:`~repro.plan.MemoryPlan` (``save(..., plan=...)`` /
+:meth:`CheckpointManager.restore_plan`) persists through the
+:mod:`repro.store.codec` tamper-evident envelope — the same integrity
+story as every other plan crossing a process boundary: verified before it
+lands, verified again (and staleness-diagnosed against the restoring
+chain) on the way out.
 """
 
 from __future__ import annotations

@@ -9,32 +9,36 @@ Repeated launches with the same (model × shape × mesh × policy) and budget
 sweeps that revisit a point therefore skip the table fill entirely; this is
 what makes plan-time a non-cost for the train/serve launch paths.
 
-Environment knobs:
+The persistent tier is a :class:`repro.store` directory backend: entries
+are tamper-evident :mod:`repro.store.codec` envelopes written atomically; a
+corrupted, truncated, or version-skewed entry is quarantined and treated as
+a miss — the caller simply re-solves and overwrites it.  This class is the
+back-compat shim over that store: its constructor/env surface is unchanged
+from the pre-store releases while all bytes flow through the one Backend
+API.
 
-- ``REPRO_SOLVER_CACHE=0`` (or ``off``/``false``/``no``) disables caching
-  entirely (no reads, no writes).
-- ``REPRO_SOLVER_CACHE_DIR=<dir>`` sets the on-disk store location; an empty
-  value keeps the cache memory-only.  Default:
-  ``$XDG_CACHE_HOME/repro/solver-cache`` (``~/.cache/...``).
-- ``REPRO_SOLVER_CACHE_SIZE=<n>`` caps the in-memory LRU (default 128).
-- ``REPRO_SOLVER_CACHE_DISK_SIZE=<n>`` caps the on-disk store (default 512
-  entries; oldest evicted).
+Environment knobs (see :mod:`repro.store.config`):
+
+- ``REPRO_STORE=<uri>`` — the store location (``file://<dir>``,
+  ``shared://<dir>``, ``memory://``); ``off`` disables caching entirely.
+  Default: ``file://$XDG_CACHE_HOME/repro/solver-cache``.
+- ``REPRO_STORE_MEM_ENTRIES=<n>`` caps the in-memory LRU (default 128);
+  ``REPRO_STORE_MAX_ENTRIES=<n>`` the on-disk store (default 512 entries,
+  oldest evicted).
+- Deprecated (mapped onto the above with a ``DeprecationWarning``):
+  ``REPRO_SOLVER_CACHE=0`` → ``REPRO_STORE=off``;
+  ``REPRO_SOLVER_CACHE_DIR=<dir>`` → ``REPRO_STORE=file://<dir>`` (empty
+  value → memory-only); ``REPRO_SOLVER_CACHE_SIZE`` →
+  ``REPRO_STORE_MEM_ENTRIES``; ``REPRO_SOLVER_CACHE_DISK_SIZE`` →
+  ``REPRO_STORE_MAX_ENTRIES``.
 
 Keys include a content hash of the solver source modules, so editing solver
 logic automatically invalidates stale on-disk entries.
-
-Disk entries are pickles written atomically; a corrupted, truncated, or
-version-skewed entry is treated as a miss (and deleted best-effort) — the
-caller simply re-solves and overwrites it.
 """
 
 from __future__ import annotations
 
 import hashlib
-import os
-import pickle
-import sys
-import tempfile
 import threading
 from collections import OrderedDict
 from pathlib import Path
@@ -43,10 +47,14 @@ from typing import Any, Optional
 import numpy as np
 
 from ..obs import metrics as _obs
+from ..store.backend import LocalDirectoryBackend, StoreError
+from ..store.codec import CorruptEntryError, decode, encode
 
 _MAGIC = "repro-solver-cache"
 _VERSION = 1
-_FALSEY = {"0", "off", "false", "no"}
+#: Envelope kind tag for cached solver Solutions (autotune winners are
+#: stored through the same cache with kind="autotune").
+SOLUTION_KIND = "solution"
 
 # modules whose source defines what a Solution means; their content hash is
 # part of every cache key, so editing solver logic auto-invalidates stale
@@ -112,40 +120,35 @@ def chain_fingerprint(chain) -> str:
     return h.hexdigest()
 
 
-def _default_dir() -> Optional[Path]:
-    env = os.environ.get("REPRO_SOLVER_CACHE_DIR")
-    if env is not None:
-        return Path(env) if env else None
-    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
-        os.path.expanduser("~"), ".cache")
-    return Path(base) / "repro" / "solver-cache"
-
-
 class SolverCache:
-    """Thread-safe LRU of solver Solutions with an optional disk tier."""
+    """Thread-safe LRU of solver Solutions with an optional persistent tier
+    (a :class:`repro.store` directory backend — the back-compat shim over
+    the typed store API)."""
 
     def __init__(self, capacity: Optional[int] = None,
                  directory: Optional[Path] = "auto",
                  enabled: Optional[bool] = None):
+        from ..store.config import resolve_settings
+        settings = resolve_settings()
         if enabled is None:
-            enabled = os.environ.get(
-                "REPRO_SOLVER_CACHE", "1").strip().lower() not in _FALSEY
+            enabled = settings.enabled
         if capacity is None:
-            try:
-                capacity = int(os.environ.get("REPRO_SOLVER_CACHE_SIZE", 128))
-            except ValueError:
-                capacity = 128
+            capacity = settings.mem_entries
         self.enabled = enabled
         self.capacity = max(capacity, 1)
-        try:
-            self.disk_capacity = max(int(os.environ.get(
-                "REPRO_SOLVER_CACHE_DISK_SIZE", 512)), 1)
-        except ValueError:
-            self.disk_capacity = 512
-        self.directory = _default_dir() if directory == "auto" else (
-            Path(directory) if directory else None)
-        if not self.enabled:
-            self.directory = None
+        self.disk_capacity = settings.max_entries
+        if directory == "auto":
+            backend = settings.make_backend() if self.enabled else None
+            # a memory:// default store adds nothing over the LRU tier
+            if backend is not None and not hasattr(backend, "path"):
+                backend = None
+        elif directory and self.enabled:
+            backend = LocalDirectoryBackend(
+                Path(directory), max_entries=self.disk_capacity)
+        else:
+            backend = None
+        self._backend = backend
+        self.directory = Path(backend.path) if backend is not None else None
         self._mem: "OrderedDict[str, Any]" = OrderedDict()
         self._lock = threading.Lock()
         self._disk_failures = 0     # consecutive; disk tier pauses after 8
@@ -179,9 +182,6 @@ class SolverCache:
 
     # -- lookup / store ----------------------------------------------------
 
-    def _path(self, key: str) -> Optional[Path]:
-        return self.directory / f"{key}.pkl" if self.directory else None
-
     def get(self, key: str) -> Optional[Any]:
         if not self.enabled:
             return None
@@ -201,13 +201,17 @@ class SolverCache:
             self._bump("misses")
         return None
 
-    def put(self, key: str, value: Any) -> None:
+    def put(self, key: str, value: Any, kind: str = SOLUTION_KIND) -> None:
+        """Store a value under its content key.  ``kind`` tags the codec
+        envelope (``"solution"`` for DP Solutions, ``"autotune"`` for
+        dp_fill winner entries); lookups are kind-agnostic — the key is a
+        content hash, so kinds can never collide."""
         if not self.enabled:
             return
         with self._lock:
             self._bump("puts")
             self._mem_put(key, value)
-        self._disk_put(key, value)
+        self._disk_put(key, value, kind)
 
     def _mem_put(self, key: str, value: Any) -> None:
         self._mem[key] = value
@@ -216,80 +220,46 @@ class SolverCache:
             self._mem.popitem(last=False)
             self._bump("evictions")
 
-    # -- disk tier ---------------------------------------------------------
+    # -- persistent tier (store backend) -----------------------------------
 
     def _disk_get(self, key: str) -> Optional[Any]:
-        path = self._path(key)
-        if path is None or not path.is_file():
+        if self._backend is None:
+            return None
+        data = self._backend.get(key)
+        if data is None:
             return None
         try:
-            with open(path, "rb") as f:
-                payload = pickle.load(f)
-            magic, version, stored_key, value = payload
-            if magic != _MAGIC or version != _VERSION or stored_key != key:
-                raise ValueError("cache entry header mismatch")
+            _, _, value = decode(data, key=key)
             return value
-        except Exception:
+        except CorruptEntryError:
+            # tampered / truncated / version-skewed / foreign-format entry:
+            # quarantine it and fall back to a fresh solve
             with self._lock:
                 self._bump("disk_errors")
-            try:
-                path.unlink()
-            except OSError:
-                pass
+            self._backend.quarantine(key)
             return None
 
-    def _disk_put(self, key: str, value: Any) -> None:
-        path = self._path(key)
-        if path is None or self._disk_failures >= 8:
+    def _disk_put(self, key: str, value: Any,
+                  kind: str = SOLUTION_KIND) -> None:
+        if self._backend is None or self._disk_failures >= 8:
             return
-        # recursion trees nest O(L) deep; pickling recurses through them
-        limit = sys.getrecursionlimit()
         try:
-            path.parent.mkdir(parents=True, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-            try:
-                sys.setrecursionlimit(max(limit, 100_000))
-                with os.fdopen(fd, "wb") as f:
-                    pickle.dump((_MAGIC, _VERSION, key, value), f,
-                                protocol=pickle.HIGHEST_PROTOCOL)
-                os.replace(tmp, path)
-            finally:
-                sys.setrecursionlimit(limit)
-                if os.path.exists(tmp):
-                    try:
-                        os.unlink(tmp)
-                    except OSError:
-                        pass
+            self._backend.put(key, encode(kind, key, value))
             self._disk_failures = 0
-            self._disk_prune()
-        except Exception:
+        except (StoreError, OSError):
             # best-effort tier: count the failure and keep trying (a burst of
             # consecutive failures pauses disk writes for this process)
             with self._lock:
                 self._bump("disk_errors")
             self._disk_failures += 1
 
-    def _disk_prune(self) -> None:
-        """Bound the on-disk store: evict oldest entries beyond the cap."""
-        try:
-            entries = sorted(self.directory.glob("*.pkl"),
-                             key=lambda p: p.stat().st_mtime)
-            for p in entries[:max(len(entries) - self.disk_capacity, 0)]:
-                p.unlink()
-        except OSError:
-            pass
-
     # -- maintenance -------------------------------------------------------
 
     def clear(self, memory_only: bool = False) -> None:
         with self._lock:
             self._mem.clear()
-        if not memory_only and self.directory and self.directory.is_dir():
-            for p in self.directory.glob("*.pkl"):
-                try:
-                    p.unlink()
-                except OSError:
-                    pass
+        if not memory_only and self._backend is not None:
+            self._backend.clear()
 
     def reset_stats(self) -> None:
         with self._lock:

@@ -4,10 +4,12 @@ The fused fill (``impl="pallas_fused"``) tiles each band's rows into
 ``(block_rows, W)`` VMEM blocks.  The best tile height depends on the
 machine and on the problem shape (row count vs the saturation-capped band
 width), so this module measures a short calibration fill over a small
-candidate grid and persists the winner through the solver cache's on-disk
-store (:mod:`repro.core.solver_cache`) — the same content-addressed pickle
-tier the DP Solutions use, with the same corruption semantics: a truncated,
-garbled, or wrong-shaped entry is treated as a miss and simply recalibrated.
+candidate grid and persists the winner through the solver cache
+(:mod:`repro.core.solver_cache`) — the same content-addressed
+:mod:`repro.store` tier the DP Solutions use (winner entries carry the
+``"autotune"`` envelope kind), with the same corruption semantics: a
+truncated, garbled, or wrong-shaped entry is treated as a miss and simply
+recalibrated.
 
 Calibration is deliberately tiny (a deterministic synthetic chain, sizes
 clamped to ``CALIBRATION_L``/``CALIBRATION_S``) and keyed by power-of-two
@@ -127,8 +129,8 @@ def measure(
 
 
 def _valid_entry(entry) -> bool:
-    """Guards against a *decodable but wrong-shaped* cache value (the pickle
-    tier already treats undecodable bytes as a miss)."""
+    """Guards against a *decodable but wrong-shaped* cache value (the store
+    tier already quarantines undecodable bytes as a miss)."""
     return (
         isinstance(entry, dict)
         and entry.get("version") == _VERSION
@@ -167,7 +169,7 @@ def autotune_block_rows(
     if cache:
         _memo[key] = result["block_rows"]
         if sc.enabled:
-            sc.put(key, result)
+            sc.put(key, result, kind="autotune")
     _obs.counter("dp_autotune.calibrations").inc()
     _obs.gauge("dp_autotune.block_rows").set(result["block_rows"])
     return result["block_rows"]

@@ -12,7 +12,7 @@ loop, launch, benchmarks — only ever handles requests and plans.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Any, Callable, List, Optional, Sequence, Union
 
 from ..core.chain import Chain, HostTransferModel
 from ..core.schedule import Schedule, simulate
@@ -164,27 +164,55 @@ class SweepPoint:
         return self.plan is not None
 
 
+def _default_frontier():
+    """The warm-start frontier over the process default store (None when
+    the store is disabled)."""
+    from ..store.config import default_store
+    from ..store.frontier import WarmStartFrontier
+    store = default_store()
+    return WarmStartFrontier(store) if store is not None else None
+
+
 def sweep(chain: Chain, fractions: Sequence[float],
           request: Optional[PlanRequest] = None, *,
-          store_all_peak: Optional[float] = None) -> List[SweepPoint]:
+          store_all_peak: Optional[float] = None,
+          frontier: Optional[Any] = None,
+          use_frontier: bool = True) -> List[SweepPoint]:
     """The time-vs-budget frontier: build one plan per budget fraction of the
     store-all peak (infeasible points yield ``plan=None`` instead of
     raising).  ``request`` is the template — its ``budget`` is replaced per
-    point; defaults to the two-tier optimal strategy.  Thanks to the solver
-    cache, revisiting a frontier is nearly free."""
+    point; defaults to the two-tier optimal strategy.
+
+    Points are answered through the warm-start frontier
+    (:class:`repro.store.WarmStartFrontier` — ``frontier`` overrides the
+    default-store one; ``use_frontier=False`` opts out): a budget already
+    recorded, bracketed by equal-time recorded points, or at/below a
+    recorded infeasible budget costs **zero** solves, so a sweep over a
+    cached chain is O(1) solves rather than one per fraction.  Undecided
+    points solve once and densify the stored frontier."""
     if request is None:
         request = PlanRequest(strategy="optimal")
     if store_all_peak is None:
         store_all_peak = chain.store_all_peak()
-    points: List[SweepPoint] = []
-    for frac in fractions:
-        budget = store_all_peak * frac
+    if frontier is None and use_frontier:
+        frontier = _default_frontier()
+
+    def _solve(budget: float) -> Optional[MemoryPlan]:
         req = dataclasses.replace(request, budget=Budget.bytes(budget),
                                   on_infeasible="raise")
         try:
-            plan = build_plan(req, chain)
+            return build_plan(req, chain)
         except InfeasiblePlanError:
-            plan = None
+            return None
+
+    points: List[SweepPoint] = []
+    for frac in fractions:
+        budget = store_all_peak * frac
+        if frontier is not None:
+            answer = frontier.query(chain, request, budget, solve=_solve)
+            plan = answer.plan
+        else:
+            plan = _solve(budget)
         points.append(SweepPoint(float(frac), budget, plan))
     return points
 

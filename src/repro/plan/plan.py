@@ -16,27 +16,33 @@ with ad-hoc ``startswith("optimal_offload")`` branching:
 - *what does it cost?* — :meth:`summary` (human), :meth:`stats` (JSON), and
   :meth:`timeline` (per-op start/end time + device/host memory).
 - *can I reuse it?* — :meth:`save` / :meth:`load` round-trip the plan through
-  disk; the file embeds the chain's content hash (shared with
-  :mod:`repro.core.solver_cache`), and loading against a different chain
-  raises :class:`StalePlanError`.
+  a path or a store URI (``file://<path>``, ``store://<namespace>/<key>``
+  into the process default :mod:`repro.store`); the
+  :mod:`repro.store.codec` envelope embeds the chain / request / code
+  fingerprints, and loading against a diverged chain raises
+  :class:`StalePlanError` naming exactly which component moved.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
-import pickle
-import sys
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.chain import Chain
 from ..core.schedule import Schedule, simulate, uses_offload
 from ..core.solver import Solution
-from ..core.solver_cache import chain_fingerprint
+from ..core.solver_cache import chain_fingerprint, code_fingerprint
+from ..store.codec import CorruptEntryError, decode, encode
 from .request import PlanRequest
 
-_PLAN_MAGIC = "repro-memory-plan"
-_PLAN_VERSION = 1
+_PLAN_VERSION = 2
+_PLAN_KIND = "memory-plan"
+#: Envelope key for path-backed saves (store-backed saves use the store
+#: key, which is cross-checked against renames by the codec).
+_PLAN_FILE_KEY = "plan"
+_STORE_SCHEME = "store://"
+_FILE_SCHEME = "file://"
 
 
 class StalePlanError(ValueError):
@@ -284,23 +290,43 @@ class MemoryPlan:
                 f"given chain hashes to {got[:12]}… — re-plan (costs, sizes "
                 f"or the host link changed)")
 
-    def save(self, path: str) -> None:
-        """Serialize the plan (header + pickle).  The header embeds the chain
-        content hash so :meth:`load` can refuse a mismatched chain.  The
-        plan is statically verified first — a corrupted schedule never
-        reaches disk (:class:`~repro.check.PlanVerificationError`)."""
-        self._verify_or_raise(f"refusing to save invalid plan to {path!r}")
-        payload = (_PLAN_MAGIC, _PLAN_VERSION, self.chain_hash, self)
-        limit = sys.getrecursionlimit()
+    def to_payload(self) -> Dict[str, Any]:
+        """The serialized form: the plan plus its full content address
+        (chain × request × code fingerprints), so any later load can name
+        exactly which component diverged."""
+        from ..store.keys import request_digest
+        return {
+            "version": _PLAN_VERSION,
+            "chain_hash": self.chain_hash,
+            "request": request_digest(self.request),
+            "code": code_fingerprint(),
+            "plan": self,
+        }
+
+    def save(self, target: str) -> None:
+        """Serialize the plan to ``target`` — a filesystem path,
+        ``file://<path>``, or ``store://<namespace>/<key>`` (written into
+        the process default :mod:`repro.store`).  The codec envelope embeds
+        the chain/request/code fingerprints so :meth:`load` can refuse a
+        mismatched chain and say why.  The plan is statically verified
+        first — a corrupted schedule never reaches disk
+        (:class:`~repro.check.PlanVerificationError`)."""
+        self._verify_or_raise(f"refusing to save invalid plan to {target!r}")
+        if target.startswith(_STORE_SCHEME):
+            from ..store.config import default_store
+            key = target[len(_STORE_SCHEME):]
+            store = default_store(required=True)
+            store.backend.put(key, encode(_PLAN_KIND, key, self.to_payload()))
+            return
+        path = (target[len(_FILE_SCHEME):]
+                if target.startswith(_FILE_SCHEME) else target)
+        data = encode(_PLAN_KIND, _PLAN_FILE_KEY, self.to_payload())
         tmp = f"{path}.tmp.{os.getpid()}"
         try:
-            # recursion trees nest O(L) deep; pickle recurses through them
-            sys.setrecursionlimit(max(limit, 100_000))
             with open(tmp, "wb") as f:
-                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.write(data)
             os.replace(tmp, path)
         finally:
-            sys.setrecursionlimit(limit)
             if os.path.exists(tmp):
                 try:
                     os.unlink(tmp)
@@ -308,30 +334,81 @@ class MemoryPlan:
                     pass
 
     @staticmethod
-    def load(path: str, chain: Optional[Chain] = None) -> "MemoryPlan":
-        """Load a saved plan.  With ``chain`` given, the plan is validated
-        against it (:class:`StalePlanError` on mismatch) — always pass the
-        chain you are about to execute on.  The deserialized schedule is
-        statically re-verified (a truncated or hand-edited plan file fails
-        with :class:`~repro.check.PlanVerificationError`, not a crash at
+    def load(target: str, chain: Optional[Chain] = None,
+             request: Optional[PlanRequest] = None) -> "MemoryPlan":
+        """Load a saved plan from a path or URI (as :meth:`save`).
+
+        With ``chain`` given, the plan is validated against it — always
+        pass the chain you are about to execute on.  Staleness is reported
+        per fingerprint component: the :class:`StalePlanError` names
+        whether the *chain* (costs/sizes/host link), the *code* (solver
+        sources), or — when ``request`` is given — the *request* diverged.
+        The deserialized schedule is statically re-verified (a truncated or
+        hand-edited plan file fails with
+        :class:`~repro.check.PlanVerificationError`, not a crash at
         execution time)."""
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
+        if target.startswith(_STORE_SCHEME):
+            from ..store.config import default_store
+            key = target[len(_STORE_SCHEME):]
+            store = default_store(required=True)
+            data = store.backend.get(key)
+            if data is None:
+                raise FileNotFoundError(f"no stored plan at {target!r}")
+            envelope_key = key
+        else:
+            path = (target[len(_FILE_SCHEME):]
+                    if target.startswith(_FILE_SCHEME) else target)
+            with open(path, "rb") as f:
+                data = f.read()
+            envelope_key = _PLAN_FILE_KEY
         try:
-            magic, version, chain_hash, plan = payload
-        except (TypeError, ValueError):
-            raise ValueError(f"{path!r} is not a saved MemoryPlan")
-        if magic != _PLAN_MAGIC:
-            raise ValueError(f"{path!r} is not a saved MemoryPlan")
-        if version != _PLAN_VERSION:
-            raise ValueError(f"saved plan {path!r} has version {version}, "
-                             f"this build reads {_PLAN_VERSION}")
-        if not isinstance(plan, MemoryPlan):
-            raise ValueError(f"{path!r} does not contain a MemoryPlan")
+            _, _, payload = decode(data, kind=_PLAN_KIND, key=envelope_key)
+        except CorruptEntryError as e:
+            raise ValueError(
+                f"{target!r} is not a saved MemoryPlan ({e})") from e
+        if not isinstance(payload, dict) or not isinstance(
+                payload.get("plan"), MemoryPlan):
+            raise ValueError(f"{target!r} does not contain a MemoryPlan")
+        if payload.get("version") != _PLAN_VERSION:
+            raise ValueError(
+                f"saved plan {target!r} has payload version "
+                f"{payload.get('version')!r}, this build reads "
+                f"{_PLAN_VERSION}")
+        plan: MemoryPlan = payload["plan"]
         if chain is not None:
-            plan.validate_chain(chain)
-        plan._verify_or_raise(f"loaded plan {path!r} fails verification")
+            plan._check_staleness(target, payload, chain, request)
+        plan._verify_or_raise(f"loaded plan {target!r} fails verification")
         return plan
+
+    def _check_staleness(self, target: str, payload: Dict[str, Any],
+                         chain: Chain,
+                         request: Optional[PlanRequest]) -> None:
+        """Component-wise fingerprint comparison: which of chain / code /
+        request moved since the plan was saved."""
+        from ..store.keys import request_digest
+        diverged: List[str] = []
+        if self.chain_hash is None:
+            raise StalePlanError(
+                "plan carries no chain hash (built from a bare length); "
+                "cannot validate it against a profiled chain")
+        if chain_fingerprint(chain) != self.chain_hash:
+            diverged.append(
+                "chain (costs, sizes or the host link changed)")
+        stored_code = payload.get("code")
+        if stored_code is not None and stored_code != code_fingerprint():
+            diverged.append(
+                "code (the solver sources changed since this plan was "
+                "solved)")
+        if request is not None:
+            stored_req = payload.get("request")
+            if stored_req is not None and (
+                    stored_req != request_digest(request)):
+                diverged.append(
+                    "request (strategy/budget/tiers/slots/impl differ)")
+        if diverged:
+            raise StalePlanError(
+                f"plan {target!r} is stale — fingerprint diverged in: "
+                + "; ".join(diverged) + " — re-plan")
 
 
 class BoundPlan:

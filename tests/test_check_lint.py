@@ -186,6 +186,54 @@ def test_imported_metric_fn_checked(tmp_path):
     assert [v.rule for v in vs] == ["metric-name"]
 
 
+# -- pickle-confinement rule -------------------------------------------------
+
+
+def test_pickle_import_flagged_outside_store(tmp_path):
+    vs = _lint_snippet(tmp_path, "plan/plan.py", """
+        import pickle
+    """)
+    assert [v.rule for v in vs] == ["pickle-confinement"]
+
+
+def test_function_local_pickle_still_flagged(tmp_path):
+    # unlike the jax rule, laziness does not make a pickle safe
+    vs = _lint_snippet(tmp_path, "core/solver_cache.py", """
+        def load(path):
+            import pickle
+            return pickle.load(open(path, "rb"))
+    """)
+    assert [v.rule for v in vs] == ["pickle-confinement"]
+
+
+def test_pickle_variants_flagged(tmp_path):
+    vs = _lint_snippet(tmp_path, "ckpt/manager.py", """
+        from marshal import loads
+
+        def f():
+            import dill
+    """)
+    assert [v.rule for v in vs] == ["pickle-confinement"] * 2
+
+
+def test_pickle_allowed_under_store(tmp_path):
+    vs = _lint_snippet(tmp_path, "store/codec.py", """
+        import pickle
+
+        def decode(data):
+            return pickle.loads(data)
+    """)
+    assert vs == []
+
+
+def test_unrelated_import_not_flagged_as_pickle(tmp_path):
+    vs = _lint_snippet(tmp_path, "plan/plan.py", """
+        import pathlib
+        from pickletools import dis  # not a (de)serializer
+    """)
+    assert vs == []
+
+
 def test_lint_paths_sorts_and_aggregates(tmp_path):
     a = tmp_path / "core" / "a.py"
     b = tmp_path / "core" / "b.py"

@@ -479,3 +479,69 @@ def test_bind_offload_eager_matches_reference():
     tree_allclose(dx, dx_ref)
     np.testing.assert_allclose(float(bound.forward(params, x)),
                                float(out_ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MemoryPlan persistence: URI targets + component-named staleness
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_plan(seed=21):
+    rng = np.random.default_rng(seed)
+    ch = random_chain(rng, max_len=6)
+    peak = simulate(ch, Schedule.store_all(ch.length)).peak_mem
+    plan = build_plan(
+        PlanRequest(
+            strategy="optimal", budget=Budget.bytes(peak), num_slots=100
+        ),
+        ch,
+    )
+    return ch, plan
+
+
+def test_plan_save_load_file_uri(tmp_path):
+    ch, plan = _roundtrip_plan()
+    uri = f"file://{tmp_path}/plan.bin"
+    plan.save(uri)
+    loaded = MemoryPlan.load(uri, chain=ch)
+    assert loaded.schedule.ops == plan.schedule.ops
+    assert loaded.expected_time == plan.expected_time
+
+
+def test_plan_save_load_store_uri():
+    from repro.store import config as store_config
+
+    ch, plan = _roundtrip_plan()
+    store_config.configure("memory://")
+    try:
+        uri = "store://plans/api-roundtrip"
+        plan.save(uri)
+        loaded = MemoryPlan.load(uri, chain=ch)
+        assert loaded.schedule.ops == plan.schedule.ops
+        with pytest.raises(FileNotFoundError):
+            MemoryPlan.load("store://plans/never-written")
+    finally:
+        store_config.reset()
+
+
+def test_stale_plan_error_names_diverged_component(tmp_path, monkeypatch):
+    ch, plan = _roundtrip_plan()
+    p = str(tmp_path / "plan.bin")
+    plan.save(p)
+    # chain divergence is named
+    uf2 = ch.uf.copy()
+    uf2[0] += 1.0
+    with pytest.raises(StalePlanError, match="chain"):
+        MemoryPlan.load(p, chain=dataclasses.replace(ch, uf=uf2))
+    # request divergence is named
+    other_req = dataclasses.replace(
+        plan.request, budget=Budget.bytes(plan.budget_bytes * 0.5)
+    )
+    with pytest.raises(StalePlanError, match="request"):
+        MemoryPlan.load(p, chain=ch, request=other_req)
+    # code divergence (a solver edit since the save) is named
+    from repro.core import solver_cache
+
+    monkeypatch.setattr(solver_cache, "_code_fingerprint", "f" * 64)
+    with pytest.raises(StalePlanError, match="code"):
+        MemoryPlan.load(p, chain=ch)

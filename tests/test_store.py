@@ -1,0 +1,246 @@
+"""repro.store tests: backend semantics, codec tamper-evidence, URI/env
+resolution, and cross-process atomicity of the shared directory backend.
+
+The multiprocess test is the dynamic side of the "never serve a torn
+entry" claim: concurrent spawn-context writers hammer one key while
+readers decode everything they see — a non-atomic write (plain
+``open(...).write``) fails it reliably.
+"""
+
+import multiprocessing
+import os
+
+import pytest
+
+from repro.store import (
+    CorruptEntryError,
+    LocalDirectoryBackend,
+    MemoryBackend,
+    ObjectStore,
+    QUARANTINE_DIR,
+    SharedDirectoryBackend,
+    StoreError,
+    decode,
+    encode,
+    from_uri,
+    resolve_settings,
+    validate_key,
+)
+
+# -- keys --------------------------------------------------------------------
+
+
+def test_validate_key_accepts_namespaced_keys():
+    assert validate_key("plans/tenant-a/abc.def.123") is not None
+
+
+@pytest.mark.parametrize(
+    "key", ["", "bad key", "a//b", "seg__ment/x", "a/:b", "../escape"]
+)
+def test_validate_key_rejects_unportable_keys(key):
+    with pytest.raises(StoreError):
+        validate_key(key)
+
+
+# -- codec -------------------------------------------------------------------
+
+
+def test_codec_roundtrip():
+    data = encode("object", "ns/k", {"x": 1, "y": [1.5, None]})
+    kind, key, obj = decode(data, kind="object", key="ns/k")
+    assert (kind, key) == ("object", "ns/k")
+    assert obj == {"x": 1, "y": [1.5, None]}
+
+
+def test_codec_detects_byte_tamper():
+    data = bytearray(encode("object", "k", {"payload": "x" * 256}))
+    data[len(data) // 2] ^= 0xFF
+    with pytest.raises(CorruptEntryError):
+        decode(bytes(data), key="k")
+
+
+def test_codec_detects_truncation():
+    data = encode("object", "k", {"payload": "x" * 256})
+    with pytest.raises(CorruptEntryError):
+        decode(data[: len(data) // 2], key="k")
+
+
+def test_codec_rejects_wrong_kind_and_key():
+    data = encode("object", "k", 42)
+    with pytest.raises(CorruptEntryError):
+        decode(data, kind="frontier", key="k")
+    with pytest.raises(CorruptEntryError):
+        decode(data, kind="object", key="other")
+
+
+def test_codec_rejects_foreign_bytes():
+    with pytest.raises(CorruptEntryError):
+        decode(b"not an envelope at all")
+
+
+# -- backends ----------------------------------------------------------------
+
+
+def test_memory_backend_lru_eviction():
+    b = MemoryBackend(capacity=2)
+    b.put("ns/a", b"1")
+    b.put("ns/b", b"2")
+    assert b.get("ns/a") == b"1"  # refresh a
+    b.put("ns/c", b"3")  # evicts b
+    assert b.get("ns/b") is None
+    assert b.get("ns/a") == b"1" and b.get("ns/c") == b"3"
+    assert sorted(b.keys("ns")) == ["ns/a", "ns/c"]
+
+
+def test_directory_backend_roundtrip_and_layout(tmp_path):
+    b = LocalDirectoryBackend(tmp_path)
+    b.put("plans/tenant-a/k1", b"payload")
+    assert b.get("plans/tenant-a/k1") == b"payload"
+    # '/' flattens to '__' in filenames so namespaces survive one flat dir
+    (entry,) = [p for p in os.listdir(tmp_path) if p.endswith(".pkl")]
+    assert entry == "plans__tenant-a__k1.pkl"
+    assert b.keys("plans/tenant-a") == ["plans/tenant-a/k1"]
+    assert b.delete("plans/tenant-a/k1")
+    assert b.get("plans/tenant-a/k1") is None
+
+
+def test_directory_backend_prunes_oldest(tmp_path):
+    b = LocalDirectoryBackend(tmp_path, max_entries=2)
+    for i in range(4):
+        b.put(f"ns/k{i}", bytes([i]))
+        os.utime(
+            tmp_path / f"ns__k{i}.pkl", (1_000_000 + i, 1_000_000 + i)
+        )
+    b.put("ns/k4", b"\x04")
+    names = sorted(p for p in os.listdir(tmp_path) if p.endswith(".pkl"))
+    assert len(names) <= 2
+    assert "ns__k4.pkl" in names  # newest survives
+
+
+def test_quarantine_moves_entry_aside(tmp_path):
+    b = LocalDirectoryBackend(tmp_path)
+    b.put("ns/bad", b"zzz")
+    assert b.quarantine("ns/bad")
+    assert b.get("ns/bad") is None
+    qdir = tmp_path / QUARANTINE_DIR
+    assert len(list(qdir.iterdir())) == 1
+
+
+def test_object_store_quarantines_corrupt_entries(tmp_path):
+    b = LocalDirectoryBackend(tmp_path)
+    store = ObjectStore(b, name="store")
+    store.put("ns/k", {"fine": True})
+    # corrupt the bytes behind the store's back
+    (tmp_path / "ns__k.pkl").write_bytes(b"garbage")
+    assert store.get("ns/k") is None
+    assert store.stats()["corrupt"] == 1
+    assert (tmp_path / QUARANTINE_DIR).exists()
+    # quarantined: the next read is a plain miss, not another corruption
+    assert store.get("ns/k") is None
+    assert store.stats()["corrupt"] == 1
+
+
+# -- URI / env resolution ----------------------------------------------------
+
+
+def test_from_uri_schemes(tmp_path):
+    assert isinstance(from_uri("memory://"), MemoryBackend)
+    local = from_uri(f"file://{tmp_path}/sub")
+    assert isinstance(local, LocalDirectoryBackend)
+    shared = from_uri(f"shared://{tmp_path}/sub2")
+    assert isinstance(shared, SharedDirectoryBackend)
+    bare = from_uri(str(tmp_path / "sub3"))
+    assert isinstance(bare, LocalDirectoryBackend)
+    with pytest.raises(StoreError):
+        from_uri("s3://nope")
+
+
+def test_repro_store_env(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_STORE", f"file://{tmp_path}")
+    s = resolve_settings()
+    assert s.enabled and s.uri == f"file://{tmp_path}"
+    monkeypatch.setenv("REPRO_STORE", "off")
+    assert not resolve_settings().enabled
+
+
+def test_legacy_env_mapped_with_deprecation(monkeypatch, tmp_path):
+    monkeypatch.delenv("REPRO_STORE", raising=False)
+    monkeypatch.setenv("REPRO_SOLVER_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_SOLVER_CACHE_SIZE", "7")
+    with pytest.warns(DeprecationWarning, match="REPRO_SOLVER_CACHE_DIR"):
+        s = resolve_settings()
+    assert s.enabled and s.uri == f"file://{tmp_path}"
+    assert s.mem_entries == 7
+    monkeypatch.setenv("REPRO_SOLVER_CACHE", "0")
+    with pytest.warns(DeprecationWarning, match="REPRO_SOLVER_CACHE"):
+        assert not resolve_settings().enabled
+
+
+def test_repro_store_wins_over_legacy(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_STORE", "memory://")
+    monkeypatch.setenv("REPRO_SOLVER_CACHE_DIR", str(tmp_path))
+    s = resolve_settings()
+    assert s.enabled and s.uri == "memory://"
+
+
+# -- cross-process atomicity -------------------------------------------------
+
+_N_WRITES = 40
+_BLOB = b"x" * 8192
+
+
+def _writer(dirpath: str, wid: int) -> None:
+    from repro.store.backend import SharedDirectoryBackend
+    from repro.store.codec import encode
+
+    b = SharedDirectoryBackend(dirpath)
+    for i in range(_N_WRITES):
+        payload = {"writer": wid, "i": i, "blob": _BLOB}
+        b.put("ns/contended", encode("object", "ns/contended", payload))
+
+
+def _reader(dirpath: str, queue) -> None:
+    from repro.store.backend import SharedDirectoryBackend
+    from repro.store.codec import CorruptEntryError, decode
+
+    b = SharedDirectoryBackend(dirpath)
+    seen, torn = 0, 0
+    for _ in range(3 * _N_WRITES):
+        data = b.get("ns/contended")
+        if data is None:
+            continue
+        try:
+            decode(data, key="ns/contended")
+            seen += 1
+        except CorruptEntryError:
+            torn += 1
+    queue.put((seen, torn))
+
+
+@pytest.mark.slow
+def test_shared_backend_concurrent_writers_never_torn(tmp_path):
+    ctx = multiprocessing.get_context("spawn")
+    queue = ctx.Queue()
+    writers = [
+        ctx.Process(target=_writer, args=(str(tmp_path), w)) for w in range(3)
+    ]
+    readers = [
+        ctx.Process(target=_reader, args=(str(tmp_path), queue))
+        for _ in range(2)
+    ]
+    for p in writers + readers:
+        p.start()
+    for p in writers + readers:
+        p.join(timeout=120)
+        assert p.exitcode == 0
+    total_seen, total_torn = 0, 0
+    for _ in readers:
+        seen, torn = queue.get(timeout=10)
+        total_seen += seen
+        total_torn += torn
+    assert total_torn == 0, f"{total_torn} torn reads"
+    assert total_seen > 0
+    # and the final entry decodes
+    b = SharedDirectoryBackend(str(tmp_path))
+    _, _, obj = decode(b.get("ns/contended"), key="ns/contended")
+    assert obj["i"] == _N_WRITES - 1
