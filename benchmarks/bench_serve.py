@@ -1,0 +1,143 @@
+"""Serving-path benchmark: tokens/s vs device-KV-budget, planned vs naive.
+
+For each architecture (one GQA, one MLA) the decode cache is planned as a
+heterogeneous chain (:func:`repro.plan.plan_serving`) at a sweep of device
+KV budgets, and the planned residency policy is executed against the naive
+per-access LRU baseline (:mod:`repro.runtime.kv_residency`).  Both policies
+run the real jitted serve loop and must reproduce the unconstrained run's
+generations token-for-token; the reported throughputs are *modeled* from the
+measured transfer byte counts and the serving link:
+
+- planned overlaps its round-trips with decode compute —
+  ``max(base_decode_s, transfer_bytes / link_bw)``;
+- the naive cache only fetches on demand, so every miss and write-back
+  stalls — ``base_decode_s + transfer_bytes / link_bw``.
+
+Dominance (planned ≥ naive at every budget point, both archs) is the gate
+``benchmarks/compare_trajectory.py`` enforces on the ``"serve"`` section of
+``BENCH_solver.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+ARCHS = ("qwen1.5-4b", "deepseek-v2-lite-16b")
+BUDGET_FRACS = (0.4, 0.7, 1.1)
+
+BATCH = 2
+PROMPT_LEN = 8
+NEW_TOKENS = 6
+MAX_LEN = 14
+
+
+def _bench_arch(name: str, emit) -> list:
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.archs import smoke_config
+    from repro.core.chain import HostTransferModel
+    from repro.models.lm import StagedLM
+    from repro.plan import plan_serving
+    from repro.runtime.serve_loop import ServeLoopConfig, run_serving
+
+    cfg = smoke_config(name)
+    if cfg.modality != "text":
+        cfg = dataclasses.replace(cfg, modality="text")
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (BATCH, PROMPT_LEN),
+                           dtype=np.int32)
+    loop = ServeLoopConfig(max_new_tokens=NEW_TOKENS, max_len=MAX_LEN)
+    link = HostTransferModel.pcie_gen3()
+
+    run_serving(cfg, params, prompts, loop, model=model)  # warm the jit
+    base = run_serving(cfg, params, prompts, loop, model=model)
+    base_s = base["decode_s"]
+    ntok = base["decode_tokens"]
+    layout = model.cache_layout(BATCH, MAX_LEN)
+    total = float(sum(layout.block_bytes))
+    emit(f"[{name}] attention={cfg.attention_kind} layers={cfg.num_layers} "
+         f"kv_total={total:.0f} B  base decode {ntok} tok "
+         f"in {base_s * 1e3:.1f} ms")
+
+    def modeled_transfer_s(stats) -> float:
+        bw_d2h = link.bandwidth_d2h
+        bw_h2d = link.bandwidth_h2d or link.bandwidth_d2h
+        return (stats["kv_offload_bytes"] / bw_d2h
+                + stats["kv_prefetch_bytes"] / bw_h2d)
+
+    rows = []
+    for frac in BUDGET_FRACS:
+        budget = total * frac
+        plan = plan_serving(cfg, budget, batch=BATCH, prompt_len=PROMPT_LEN,
+                            max_len=MAX_LEN, host=link)
+        planned = run_serving(cfg, params, prompts, loop, model=model,
+                              plan=plan, kv_budget=budget)
+        naive = run_serving(cfg, params, prompts, loop, model=model,
+                            kv_policy="lru", kv_budget=budget, host=link)
+        for tag, out in (("planned", planned), ("lru", naive)):
+            if not np.array_equal(out["generations"], base["generations"]):
+                raise AssertionError(
+                    f"{name} @ x{frac}: {tag} policy changed the generations")
+        planned_tok_s = ntok / max(base_s, modeled_transfer_s(planned))
+        lru_tok_s = ntok / (base_s + modeled_transfer_s(naive))
+        row = {
+            "arch": name,
+            "attention": cfg.attention_kind,
+            "budget_frac": frac,
+            "budget_bytes": budget,
+            "host_layers": len(planned["kv_host_layers"]),
+            "planned_transfer_bytes": planned["kv_transfer_bytes"],
+            "lru_transfer_bytes": naive["kv_transfer_bytes"],
+            "planned_tok_s": planned_tok_s,
+            "lru_tok_s": lru_tok_s,
+            "dominates": bool(planned_tok_s + 1e-9 >= lru_tok_s),
+        }
+        rows.append(row)
+        emit(f"  x{frac:<4} staged {row['host_layers']}/{cfg.num_layers} "
+             f"layers  planned {planned_tok_s:8.1f} tok/s "
+             f"({planned['kv_transfer_bytes']:.0f} B moved)  "
+             f"lru {lru_tok_s:8.1f} tok/s "
+             f"({naive['kv_transfer_bytes']:.0f} B moved)  "
+             f"{'OK' if row['dominates'] else 'REGRESSION'}")
+    return rows
+
+
+def serve_section(emit=print, small: bool = True) -> dict:
+    """The ``"serve"`` section of ``BENCH_solver.json``: the planned
+    residency policy must match or beat naive LRU at every budget point on
+    every arch (``compare_trajectory.check_serve`` gates on ``dominates``)."""
+    rows = []
+    for arch in ARCHS:
+        rows.extend(_bench_arch(arch, emit))
+    return {
+        "archs": list(ARCHS),
+        "batch": BATCH,
+        "prompt_len": PROMPT_LEN,
+        "new_tokens": NEW_TOKENS,
+        "budget_fracs": list(BUDGET_FRACS),
+        "rows": rows,
+        "dominates": all(r["dominates"] for r in rows),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="print the serve section as JSON")
+    args = ap.parse_args()
+    section = serve_section(emit=print)
+    if args.json:
+        print(json.dumps(section, indent=2))
+    if not section["dominates"]:
+        raise SystemExit("planned KV residency lost to naive LRU — see rows")
+    print("planned policy dominates naive LRU at every budget point")
+
+
+if __name__ == "__main__":
+    main()

@@ -239,6 +239,7 @@ def write_json(result: dict, path: str = JSON_PATH) -> None:
 def main(emit=print, small: bool = True):
     from .bench_fleet import main as fleet_main
     from .bench_prediction import drift_section
+    from .bench_serve import serve_section
 
     if small:
         result = run(lengths=(20, 50, 100), num_slots=200, emit=emit)
@@ -246,6 +247,8 @@ def main(emit=print, small: bool = True):
         result["prediction"] = drift_section(emit=emit, small=True)
         emit("# fleet section (cold-vs-warm plan store, frontier query):")
         result["fleet"] = fleet_main(emit=emit, small=True)
+        emit("# serve section (planned vs naive KV residency):")
+        result["serve"] = serve_section(emit=emit, small=True)
         return result
     result = run(emit=emit)
     # Embed the CI-sized run too: the bench-trajectory job replays exactly
@@ -257,6 +260,8 @@ def main(emit=print, small: bool = True):
     result["prediction"] = drift_section(emit=emit, small=True)
     emit("# fleet section (cold-vs-warm plan store, frontier query):")
     result["fleet"] = fleet_main(emit=emit, small=False)
+    emit("# serve section (planned vs naive KV residency):")
+    result["serve"] = serve_section(emit=emit, small=True)
     return result
 
 

@@ -117,6 +117,7 @@ def compare(baseline: dict, current: dict, threshold: float,
             verdict = "ok"
         print(f"{prefix} {base_s:>9.3f} {cur_s:>9.3f} {ratio:>7.2f}  {verdict}")
     breaches += check_fleet(current.get("fleet"))
+    breaches += check_serve(current.get("serve"))
     return breaches
 
 
@@ -146,6 +147,28 @@ def check_fleet(fleet) -> int:
         )
         source = frontier.get("source")
         print(f"fleet: frontier query source={source} solves={solves}  {verdict}")
+    return breaches
+
+
+def check_serve(serve) -> int:
+    """Gate the ``serve`` section: the planned KV-residency policy must match
+    or beat naive LRU (modeled tokens/s) at every budget point on every
+    arch.  Absent section (pre-serving baselines) passes."""
+    if not isinstance(serve, dict):
+        return 0
+    breaches = 0
+    for row in serve.get("rows", []):
+        planned = row.get("planned_tok_s")
+        lru = row.get("lru_tok_s")
+        if planned is None or lru is None:
+            continue
+        ok = planned + 1e-9 >= lru
+        breaches += not ok
+        verdict = "ok" if ok else "REGRESSION (planned lost to naive LRU)"
+        print(
+            f"serve: {row.get('arch'):<22} x{row.get('budget_frac'):<4} "
+            f"planned {planned:9.1f} tok/s  lru {lru:9.1f} tok/s  {verdict}"
+        )
     return breaches
 
 

@@ -65,6 +65,27 @@ def _layer_flops(cfg, kind: str, B: int, S: int, kv_len=None) -> float:
     return _mamba_flops(cfg, B, S)
 
 
+def per_layer_flops(cfg, B: int, S: int, kv_len: int | None = None
+                    ) -> List[float]:
+    """Forward FLOPs per *model layer* (length ``cfg.num_layers``).
+
+    The Zamba2 shared-attention block is attributed to the period-start
+    layers that invoke it.  ``kv_len`` prices attention against a KV prefix
+    longer than ``S`` (the decode-step case: ``S=1``, ``kv_len=`` cache
+    position) — this is what the KV-residency planner uses for per-layer
+    ``u_f``/``u_b`` estimates (:mod:`repro.plan.serving`)."""
+    out = [0.0] * cfg.num_layers
+    for kind, start, length in cfg.chunks:
+        per = _layer_flops(cfg, kind, B, S, kv_len)
+        for j in range(start, start + length):
+            out[j] += per
+        if (cfg.hybrid_period and kind == "zamba"
+                and start % cfg.hybrid_period == 0):
+            out[start] += (_attn_flops(cfg, B, S, kv_len)
+                           + _mlp_flops(cfg, B, S, cfg.d_ff))
+    return out
+
+
 def stage_flops(cfg, B: int, S: int) -> Tuple[List[float], List[float]]:
     """(fwd, bwd) FLOPs per rotor stage: [embed] + chunks + [head+loss]."""
     fwd: List[float] = [2 * B * S * cfg.d_model]  # lookup/scale — negligible

@@ -35,6 +35,33 @@ from .common import (dense_apply, dense_init, rms_norm, rms_norm_init,
 Params = Dict[str, Any]
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Byte layout of a decode cache (see :meth:`StagedLM.cache_layout`).
+
+    - ``block_bytes[j]`` — allocated bytes of model layer ``j``'s cache
+      slice: its KV block padded to ``max_len`` (attention layers) or its
+      recurrent state (SSM layers); the Zamba2 shared-attention KV is
+      attributed evenly to the period-start layers that invoke it.
+    - ``token_bytes`` — bytes logically appended per decoded token across
+      all attention layers (the cache's logical growth rate).
+    - ``static_bytes`` — position-independent bytes (SSM conv/ssm states,
+      the ``pos`` scalar).
+    - ``allocated_bytes`` — total preallocated bytes; equals
+      ``static_bytes + token_bytes * max_len`` exactly.
+    """
+
+    block_bytes: Tuple[int, ...]
+    token_bytes: int
+    static_bytes: int
+    allocated_bytes: int
+    max_len: int
+
+    def logical_bytes(self, pos: int) -> int:
+        """Bytes logically resident with ``pos`` tokens in the cache."""
+        return self.static_bytes + int(pos) * self.token_bytes
+
+
 # ---------------------------------------------------------------------------
 # configuration
 # ---------------------------------------------------------------------------
@@ -117,6 +144,15 @@ class ModelConfig:
                 runs.append((self.layer_kinds[start], start, i - start))
                 start = i
         return runs
+
+    @property
+    def layer_slices(self) -> List[Tuple[int, int]]:
+        """Per global layer ``j``: ``(chunk index, offset)`` into the stacked
+        per-chunk parameter / decode-cache pytrees."""
+        out: List[Tuple[int, int]] = []
+        for ci, (kind, start, length) in enumerate(self.chunks):
+            out.extend((ci, off) for off in range(length))
+        return out
 
     @property
     def chunks(self) -> List[Tuple[str, int, int]]:
@@ -555,6 +591,44 @@ class StagedLM:
                 "k": jnp.zeros((n_inv, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
                 "v": jnp.zeros((n_inv, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.dtype)}
         return out
+
+    def cache_layout(self, batch: int, max_len: int) -> "CacheLayout":
+        """Byte layout of the decode cache, sized by ``jax.eval_shape`` over
+        :meth:`init_cache` at the configured ``kv_cache_dtype`` (nothing is
+        allocated).  This is the measurement base for the serve loop's KV
+        telemetry and the sizing base for the KV-residency planner
+        (:mod:`repro.plan.serving`)."""
+        cfg = self.cfg
+        spec = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+        def nbytes(tree) -> int:
+            return int(sum(math.prod(leaf.shape) * leaf.dtype.itemsize
+                           for leaf in jax.tree.leaves(tree)))
+
+        blocks = [0] * cfg.num_layers
+        token_bytes = 0
+        static_bytes = nbytes(spec["pos"])
+        for ci, (kind, start, length) in enumerate(cfg.chunks):
+            chunk_bytes = nbytes(spec["chunks"][ci])
+            per_layer = chunk_bytes // length
+            for j in range(start, start + length):
+                blocks[j] += per_layer
+            if kind in ("dense", "moe"):
+                token_bytes += chunk_bytes // max_len
+            else:
+                static_bytes += chunk_bytes  # recurrent state: no seq axis
+        if "shared" in spec:
+            shared_bytes = nbytes(spec["shared"])
+            starts = [start for kind, start, _ in cfg.chunks
+                      if kind == "zamba" and start % cfg.hybrid_period == 0]
+            for s in starts:
+                blocks[s] += shared_bytes // len(starts)
+            token_bytes += shared_bytes // max_len
+        return CacheLayout(block_bytes=tuple(blocks),
+                           token_bytes=token_bytes,
+                           static_bytes=static_bytes,
+                           allocated_bytes=nbytes(spec),
+                           max_len=max_len)
 
     def cache_axes(self) -> Dict:
         """Logical sharding axes for the decode cache (mirrors init_cache)."""

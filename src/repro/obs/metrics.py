@@ -3,7 +3,11 @@
 The hot seams of the planning/execution stack report here — solver-cache
 hits/misses/evictions, DP fill wall time per impl, autotuner calibration
 decisions, host-buffer pin-pool occupancy, offload stall time, train-loop
-step time and loss, serving KV residency.  The registry is deliberately
+step time and loss, serving KV residency (``serve.kv_bytes`` is *logical*
+residency tracking the cache position, ``serve.kv_bytes_allocated`` the
+padded allocation, ``serve.decode_tokens`` live tokens only, and the
+KV-residency policies add ``serve.kv_transfer_bytes`` /
+``serve.kv_stall_seconds``).  The registry is deliberately
 dependency-free (stdlib only) so the numpy core and jax-free modules can
 import it without dragging in an accelerator runtime.
 

@@ -9,8 +9,11 @@ entries when an insert would overflow the reservation.
 Checkpoint copies are precious — evicting one silently would force a
 recompute the solver never planned — so eviction is opt-in: with
 ``evict=False`` (the executor's default) an overflowing ``put`` raises
-instead.  The LRU machinery is still exercised for accounting (bench/serving
-scenarios reuse the pool as a best-effort activation cache).
+instead.  The LRU machinery is still exercised for accounting, and the
+serving path's KV-residency policies (:mod:`repro.runtime.kv_residency`)
+stage cold prefix-KV blocks through the same pool with ``evict=True`` —
+best-effort mode: a planned entry that gets evicted is detected at restore
+time and raises rather than silently recomputing.
 """
 
 from __future__ import annotations

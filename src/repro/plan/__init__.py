@@ -31,6 +31,7 @@ from .plan import BoundPlan, InfeasiblePlanError, MemoryPlan, StalePlanError
 from .registry import SolverEntry, available_solvers, register_solver, solver_for
 from .request import (DEFAULT_NUM_SLOTS, Budget, PlanRequest, parse_size,
                       SOLVER_STRATEGIES, STRUCTURAL_STRATEGIES)
+from .serving import kv_chain, kv_residency_layers, plan_serving
 
 __all__ = [
     "Budget", "PlanRequest", "MemoryPlan", "BoundPlan", "SweepPoint",
@@ -38,6 +39,7 @@ __all__ = [
     "PlanVerificationError",
     "build_plan", "sweep", "min_memory_plan", "two_tier_fallback",
     "register_solver", "solver_for", "available_solvers", "parse_size",
+    "kv_chain", "plan_serving", "kv_residency_layers",
     "policy_to_request", "resolve_policy", "DOCUMENTED_POLICIES",
     "DEFAULT_NUM_SLOTS", "SOLVER_STRATEGIES", "STRUCTURAL_STRATEGIES",
 ]

@@ -34,9 +34,10 @@ def _structural_tree(request: PlanRequest, length: int):
 
 
 def _resolve_host(request: PlanRequest, chain: Chain) -> Chain:
-    """For host-tier requests, attach the link model: explicit override →
-    the chain's profiled link → the PCIe-3 x16 constant."""
-    if "host" not in request.tiers:
+    """For host-backed tier requests (``"host"`` for training activations,
+    ``"kv"`` for serving-time KV blocks), attach the link model: explicit
+    override → the chain's profiled link → the PCIe-3 x16 constant."""
+    if not {"host", "kv"} & set(request.tiers):
         return chain
     host = request.host or chain.host or HostTransferModel.pcie_gen3()
     return chain.with_host(host)

@@ -106,3 +106,8 @@ register_solver(
 register_solver(
     "device+host", _three_tier_solve, _three_tier_solve_min,
     "three-tier DP with asynchronous host-RAM activation offload")
+register_solver(
+    "device+kv", _three_tier_solve, _three_tier_solve_min,
+    "serving-path KV-cache residency: per-layer decode KV blocks as chain "
+    "activations, cold prefix KV staged to host RAM over the serving link "
+    "(reuses the three-tier offload DP; see repro.plan.serving)")

@@ -159,8 +159,9 @@ class PlanRequest:
     - ``segments`` — segment count for ``periodic``.
     - ``tiers`` — storage tiers to plan over: ``("device",)`` is the paper's
       two-tier model, ``("device", "host")`` adds asynchronous host-RAM
-      offload.  The tier combo selects the solver through
-      :mod:`repro.plan.registry`.
+      offload, ``("device", "kv")`` is the serving scenario (per-layer
+      decode KV blocks staged to host RAM — see :mod:`repro.plan.serving`).
+      The tier combo selects the solver through :mod:`repro.plan.registry`.
     - ``host`` — optional :class:`HostTransferModel` override; when the host
       tier is requested and this is ``None``, the chain's profiled link is
       used, falling back to the PCIe-3 x16 constant.

@@ -11,6 +11,8 @@ _EXPORTS = {
     "run_training": ("train_loop", "run_training"),
     "ServeLoopConfig": ("serve_loop", "ServeLoopConfig"),
     "run_serving": ("serve_loop", "run_serving"),
+    "PlannedKV": ("kv_residency", "PlannedKV"),
+    "LRUKV": ("kv_residency", "LRUKV"),
     "PlanService": ("plan_service", "PlanService"),
     "TenantQuota": ("plan_service", "TenantQuota"),
     "QuotaExceededError": ("plan_service", "QuotaExceededError"),

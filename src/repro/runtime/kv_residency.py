@@ -1,0 +1,246 @@
+"""KV-cache residency executors for the serve loop.
+
+Two policies move cold prefix-KV blocks between device HBM and the pinned
+host pool (:class:`repro.offload.host_buffer.HostBuffer`) around each decode
+step:
+
+- :class:`PlannedKV` executes a :func:`repro.plan.plan_serving` decision: the
+  planner's staged layer set round-trips through the host pool every step —
+  ``Prefetch`` ahead of the step, ``Foff`` back after it — and the stall
+  accounting credits compute/transfer overlap the way the offload simulator
+  does (only time beyond the step's own wall-clock stalls).
+- :class:`LRUKV` is the naive baseline the planner must dominate: a
+  capacity-bounded cache of KV blocks with true per-access LRU bookkeeping.
+  Each layer's block is touched in order every step, so any capacity short
+  of the full set degenerates into the classic cyclic-scan pathology — every
+  access misses — which is exactly the behaviour an unplanned
+  ``HostBuffer``-backed cache exhibits, and every miss stalls the step
+  (nothing prefetches ahead of need).
+
+Emulation note (mirrors :mod:`repro.offload.executor`): the jitted decode
+step consumes the whole stacked cache, so blocks are *physically*
+materialized for the step and re-staged after it; the byte/stall accounting
+above models the per-layer pipelined residency a device runtime would see.
+Transfer and stall totals come from the chain's
+:class:`~repro.core.chain.HostTransferModel` — on CPU emulation the physical
+copies are host↔host, so modeled time is authoritative, not wall-clock.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.chain import HostTransferModel
+from ..obs import metrics as obs_metrics
+from ..offload.host_buffer import HostBuffer
+
+
+class _KVStager:
+    """Shared mechanics: slice one layer's KV block out of the stacked
+    per-chunk cache pytree, park it in the host pool, restore it later."""
+
+    policy = "base"
+
+    def __init__(self, model, layout, link: Optional[HostTransferModel] = None,
+                 buffer: Optional[HostBuffer] = None, tracer=None):
+        self.model = model
+        self.layout = layout
+        self.link = link or HostTransferModel.pcie_gen3()
+        self.buffer = buffer if buffer is not None else HostBuffer(None)
+        self.tracer = tracer
+        self._slices = model.cfg.layer_slices
+        self.offload_bytes = 0.0
+        self.prefetch_bytes = 0.0
+        self.stall_s = 0.0
+
+    # -- physical block movement ------------------------------------------
+
+    def _store(self, cache: Dict, j: int) -> Dict:
+        """Copy layer ``j``'s KV block to the host pool and zero the device
+        slice (the emulation's stand-in for freeing HBM)."""
+        ci, off = self._slices[j]
+        block = jax.tree.map(lambda x: np.asarray(x[off]),
+                             cache["chunks"][ci])
+        self.buffer.put(("kv", j), block,
+                        nbytes=self.layout.block_bytes[j], evict=True)
+        chunks = list(cache["chunks"])
+        chunks[ci] = jax.tree.map(lambda x: x.at[off].set(0), chunks[ci])
+        return {**cache, "chunks": chunks}
+
+    def _load(self, cache: Dict, j: int) -> Dict:
+        """Restore layer ``j``'s KV block from the host pool."""
+        block = self.buffer.get(("kv", j))
+        if block is None:
+            raise RuntimeError(
+                f"host pool no longer holds the KV block for layer {j} — "
+                f"the pinned capacity evicted a planned entry; size the "
+                f"HostBuffer to hold every host-resident layer")
+        ci, off = self._slices[j]
+        chunks = list(cache["chunks"])
+        chunks[ci] = jax.tree.map(
+            lambda x, v: x.at[off].set(jnp.asarray(v, x.dtype)),
+            chunks[ci], block)
+        return {**cache, "chunks": chunks}
+
+    # -- accounting --------------------------------------------------------
+
+    def _count(self, direction: str, j: int, stall: bool) -> float:
+        b = self.layout.block_bytes[j]
+        if direction == "offload":
+            self.offload_bytes += b
+            t = self.link.offload_time(b)
+        else:
+            self.prefetch_bytes += b
+            t = self.link.prefetch_time(b)
+        obs_metrics.counter("serve.kv_transfer_bytes").inc(b)
+        if stall:
+            self.stall_s += t
+        if self.tracer is not None and getattr(self.tracer, "enabled", True):
+            now = self.tracer.now()
+            op = "Foff" if direction == "offload" else "Prefetch"
+            self.tracer.record(op, j + 1, now, now + t, bytes=b)
+        return t
+
+    def result_stats(self) -> Dict[str, Any]:
+        obs_metrics.histogram("serve.kv_stall_seconds").observe(self.stall_s)
+        return {
+            "kv_policy": self.policy,
+            "kv_offload_bytes": self.offload_bytes,
+            "kv_prefetch_bytes": self.prefetch_bytes,
+            "kv_transfer_bytes": self.offload_bytes + self.prefetch_bytes,
+            "kv_stall_s": self.stall_s,
+        }
+
+
+class PlannedKV(_KVStager):
+    """Execute a planned residency set: the layers in ``host_layers`` live in
+    host RAM between steps, prefetched ahead of each step and offloaded back
+    behind it.  Transfers overlap the step's compute; only the excess beyond
+    the measured step wall-clock is booked as stall."""
+
+    policy = "planned"
+
+    def __init__(self, model, layout, host_layers: List[int],
+                 link: Optional[HostTransferModel] = None,
+                 buffer: Optional[HostBuffer] = None, tracer=None):
+        super().__init__(model, layout, link=link, buffer=buffer,
+                         tracer=tracer)
+        self.host_layers = sorted(host_layers)
+
+    def stage_initial(self, cache: Dict) -> Dict:
+        """Move the planned set to host right after prefill (off the decode
+        critical path — no stall booked)."""
+        for j in self.host_layers:
+            cache = self._store(cache, j)
+            self._count("offload", j, stall=False)
+        return cache
+
+    def begin_step(self, cache: Dict) -> Dict:
+        """Prefetch the planned set back for the upcoming step; the transfer
+        time is reconciled against the step's wall in :meth:`end_step`."""
+        for j in self.host_layers:
+            cache = self._load(cache, j)
+            self._count("prefetch", j, stall=False)
+        return cache
+
+    def end_step(self, cache: Dict, step_wall_s: float = 0.0) -> Dict:
+        """Offload the planned set again after the step.  The round-trip
+        (this offload + the next prefetch) overlaps the *next* step's
+        compute; time beyond ``step_wall_s`` is booked as stall."""
+        t = 0.0
+        for j in self.host_layers:
+            cache = self._store(cache, j)
+            t += self._count("offload", j, stall=False)
+            t += self.link.prefetch_time(self.layout.block_bytes[j])
+        self.stall_s += max(0.0, t - step_wall_s)
+        return cache
+
+    def result_stats(self) -> Dict[str, Any]:
+        out = super().result_stats()
+        out["kv_host_layers"] = list(self.host_layers)
+        return out
+
+
+class LRUKV(_KVStager):
+    """Naive baseline: device HBM holds at most ``budget_bytes`` of KV
+    blocks, managed by true per-access LRU.  Bookkeeping simulates the
+    per-layer access sequence of each decode step (misses stall — the naive
+    cache only fetches on demand); physically, the stacked cache is restored
+    wholesale for the jitted step and re-staged to the bookkeeping's resident
+    set afterwards (see the module docstring)."""
+
+    policy = "lru"
+
+    def __init__(self, model, layout, budget_bytes: float,
+                 link: Optional[HostTransferModel] = None,
+                 buffer: Optional[HostBuffer] = None, tracer=None):
+        super().__init__(model, layout, link=link, buffer=buffer,
+                         tracer=tracer)
+        self.budget_bytes = float(budget_bytes)
+        # recency-ordered resident set: first = least recently used
+        self._resident: List[int] = []
+        self.hits = 0
+        self.misses = 0
+
+    def _resident_bytes(self) -> float:
+        return float(sum(self.layout.block_bytes[j] for j in self._resident))
+
+    def _evict_to_fit(self, incoming: float, stall: bool) -> List[int]:
+        """Evict least-recently-used blocks until ``incoming`` fits (always
+        keeping at least the incoming block itself admissible)."""
+        out = []
+        while (self._resident
+               and self._resident_bytes() + incoming > self.budget_bytes):
+            k = self._resident.pop(0)
+            out.append(k)
+            self._count("offload", k, stall=stall)
+        return out
+
+    def stage_initial(self, cache: Dict) -> Dict:
+        """After prefill everything is on device; evict coldest-first (layer
+        0 was filled first) down to the budget.  Off the critical path — no
+        stall booked."""
+        self._resident = list(range(len(self.layout.block_bytes)))
+        victims = self._evict_to_fit(0.0, stall=False)
+        for j in victims:
+            cache = self._store(cache, j)
+        return cache
+
+    def begin_step(self, cache: Dict) -> Dict:
+        """Bookkeep one decode step's layer-order accesses (miss → demand
+        fetch, stalling; evictions write back, stalling), then physically
+        restore whatever the step needs."""
+        host_before = [j for j in range(len(self.layout.block_bytes))
+                       if j not in self._resident]
+        for j in range(len(self.layout.block_bytes)):
+            if j in self._resident:
+                self.hits += 1
+                self._resident.remove(j)
+                self._resident.append(j)    # refresh recency
+                continue
+            self.misses += 1
+            self._evict_to_fit(self.layout.block_bytes[j], stall=True)
+            self._count("prefetch", j, stall=True)
+            self._resident.append(j)
+        # physically rebuild the full stacked cache for the jitted step
+        for j in host_before:
+            cache = self._load(cache, j)
+        return cache
+
+    def end_step(self, cache: Dict, step_wall_s: float = 0.0) -> Dict:
+        """Re-stage the blocks the bookkeeping says ended up evicted."""
+        for j in range(len(self.layout.block_bytes)):
+            if j not in self._resident:
+                cache = self._store(cache, j)
+        return cache
+
+    def result_stats(self) -> Dict[str, Any]:
+        out = super().result_stats()
+        out["kv_lru_hits"] = self.hits
+        out["kv_lru_misses"] = self.misses
+        out["kv_budget_bytes"] = self.budget_bytes
+        return out

@@ -282,11 +282,21 @@ def test_serve_loop_traces_decode_spans():
     decodes = [s for s in tr.spans if s.op == "Decode"]
     assert len(decodes) == 4                       # max_new_tokens - 1
     assert [s.arg for s in decodes] == [1, 2, 3, 4]
-    assert all(s.bytes == out["kv_bytes"] for s in decodes)
+    # each span reports the *logical* residency at that step: prompt tokens
+    # plus the tokens decoded so far — strictly increasing, not the padded
+    # allocation, ending at the run's reported kv_bytes
+    span_bytes = [s.bytes for s in decodes]
+    assert span_bytes == sorted(span_bytes) and len(set(span_bytes)) == 4
+    assert span_bytes[-1] == out["kv_bytes"]
     steps = [s for s in tr.spans if s.op == "Step"]
     assert len(steps) == 1                         # the prefill
+    assert steps[0].t_start >= 0                   # same clock as t_end
     assert metrics.value("serve.kv_bytes") == out["kv_bytes"] > 0
-    assert metrics.value("serve.decode_tokens") >= 1
+    assert (metrics.value("serve.kv_bytes_allocated")
+            == out["kv_bytes_allocated"] > out["kv_bytes"])
+    # no EOS configured: every decoded token is live (B=2, 4 decode steps)
+    assert metrics.counter("serve.decode_tokens").value == 8
+    assert out["decode_tokens"] == 8
     validate_perfetto(tr.to_perfetto())
 
 

@@ -1,0 +1,250 @@
+"""Serving-path tests: KV-cache byte accounting (logical vs allocated),
+live-token decode counters under EOS, span clock sanity, and the planned
+KV-residency policy against the naive LRU baseline."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.lm import CacheLayout, StagedLM
+from repro.runtime.serve_loop import ServeLoopConfig, run_serving
+
+
+# ---------------------------------------------------------------------------
+# cache layout accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "deepseek-v2-lite-16b", "zamba2-2.7b"])
+def test_cache_layout_accounts_for_every_byte(arch):
+    """logical_bytes(max_len) is exactly the allocation, every non-``pos``
+    byte is attributed to exactly one layer block, and logical residency
+    grows linearly in ``pos`` (attention KV) from the static floor
+    (recurrent state has no sequence axis)."""
+    cfg = smoke_config(arch)
+    if cfg.modality != "text":
+        cfg = dataclasses.replace(cfg, modality="text")
+    layout = StagedLM(cfg).cache_layout(2, 12)
+    assert len(layout.block_bytes) == cfg.num_layers
+    assert layout.logical_bytes(layout.max_len) == layout.allocated_bytes
+    pos_bytes = 4  # the int32 position scalar, the only un-attributed leaf
+    assert sum(layout.block_bytes) + pos_bytes == layout.allocated_bytes
+    assert layout.logical_bytes(0) == layout.static_bytes
+    assert layout.logical_bytes(5) == layout.static_bytes + 5 * layout.token_bytes
+
+
+def test_cache_layout_recurrent_state_is_static():
+    """A pure-SSM arch holds conv/ssm state only: residency must not grow
+    with ``pos`` at all."""
+    cfg = smoke_config("mamba2-1.3b")
+    layout = StagedLM(cfg).cache_layout(2, 12)
+    assert layout.token_bytes == 0
+    assert layout.logical_bytes(0) == layout.logical_bytes(12)
+
+
+# ---------------------------------------------------------------------------
+# telemetry fixes: a scripted model with controllable EOS timing
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedLM:
+    """Serve-loop stand-in: decode step ``k`` (0-based) emits ``eos_id`` for
+    sequence ``b`` once ``k >= finish[b]``, token 7 before that; prefill
+    emits token 5.  Jittable, with a minimal {pos, step} cache."""
+
+    eos_id = 3
+    vocab = 10
+
+    def __init__(self, finish):
+        self.cfg = None
+        self.finish = jnp.asarray(finish, jnp.int32)
+
+    def cache_layout(self, batch, max_len):
+        return CacheLayout(
+            block_bytes=(128, 128),
+            token_bytes=16 * batch,
+            static_bytes=4,
+            allocated_bytes=4 + 16 * batch * max_len,
+            max_len=max_len,
+        )
+
+    def prefill(self, params, batch, max_len=None):
+        tokens = batch["tokens"]
+        B, S0 = tokens.shape
+        logits = jnp.zeros((B, S0, self.vocab)).at[:, :, 5].set(1.0)
+        cache = {"pos": jnp.asarray(S0, jnp.int32), "step": jnp.zeros((), jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        B = tokens.shape[0]
+        tok = jnp.where(cache["step"] >= self.finish, self.eos_id, 7)
+        logits = jnp.zeros((B, 1, self.vocab))
+        logits = logits.at[jnp.arange(B), 0, tok].set(1.0)
+        return logits, {"pos": cache["pos"] + 1, "step": cache["step"] + 1}
+
+
+def test_decode_token_counter_skips_padding_after_eos():
+    """seq 0 finishes on the first decode step, seq 1 on the third: only the
+    4 live tokens count, not the padding the finished slot keeps decoding
+    (the old counter charged B * steps = 6)."""
+    from repro.obs import metrics
+
+    model = _ScriptedLM(finish=(0, 2))
+    prompts = np.zeros((2, 4), np.int32)
+    loop = ServeLoopConfig(max_new_tokens=6, max_len=16, eos_id=3)
+    metrics.reset()
+    out = run_serving(None, None, prompts, loop, model=model)
+    assert out["generations"].shape == (2, 4)  # prefill token + 3 steps
+    assert out["decode_tokens"] == 4
+    assert metrics.counter("serve.decode_tokens").value == 4
+    assert out["decode_tokens_per_s"] > 0
+
+
+def test_decode_token_counter_counts_the_eos_itself():
+    """The EOS a live sequence emits is real output; only tokens *after* it
+    are padding."""
+    model = _ScriptedLM(finish=(1, 1))
+    prompts = np.zeros((2, 4), np.int32)
+    loop = ServeLoopConfig(max_new_tokens=5, max_len=16, eos_id=3)
+    out = run_serving(None, None, prompts, loop, model=model)
+    # step 0 emits 7,7 (live); step 1 emits eos,eos (live) -> all done
+    assert out["decode_tokens"] == 4
+    assert out["generations"].shape == (2, 3)
+
+
+def test_logical_kv_gauge_tracks_pos_not_allocation():
+    """The kv_bytes gauge and Decode spans report what the cache holds
+    (static + pos * per-token), not the padded max_len allocation."""
+    from repro.obs import metrics
+    from repro.obs.trace import Tracer
+
+    model = _ScriptedLM(finish=(99, 99))
+    prompts = np.zeros((2, 4), np.int32)
+    loop = ServeLoopConfig(max_new_tokens=4, max_len=16)
+    layout = model.cache_layout(2, 16)
+    metrics.reset()
+    tr = Tracer(name="serve")
+    out = run_serving(None, None, prompts, loop, model=model, tracer=tr)
+    spans = [s for s in tr.spans if s.op == "Decode"]
+    assert [s.bytes for s in spans] == [layout.logical_bytes(p) for p in (5, 6, 7)]
+    assert out["kv_bytes"] == layout.logical_bytes(7)
+    assert out["kv_bytes_allocated"] == layout.allocated_bytes
+    assert metrics.value("serve.kv_bytes") == out["kv_bytes"]
+    assert metrics.value("serve.kv_bytes_allocated") == layout.allocated_bytes
+    assert out["kv_bytes"] < out["kv_bytes_allocated"]
+
+
+def test_spans_share_one_clock():
+    """Prefill Step span endpoints both come from the tracer clock — the old
+    mixed perf_counter/tracer arithmetic pushed t_start negative whenever
+    prefill (jit compile included) outlasted the tracer epoch offset."""
+    from repro.obs.trace import Tracer
+
+    model = _ScriptedLM(finish=(99,))
+    tr = Tracer(name="serve")
+    run_serving(
+        None,
+        None,
+        np.zeros((1, 4), np.int32),
+        ServeLoopConfig(max_new_tokens=3, max_len=16),
+        model=model,
+        tracer=tr,
+    )
+    for s in tr.spans:
+        assert 0 <= s.t_start <= s.t_end
+
+
+def test_prompt_overflow_raises_value_error():
+    model = _ScriptedLM(finish=(99,))
+    with pytest.raises(ValueError, match="max_len"):
+        run_serving(
+            None,
+            None,
+            np.zeros((1, 8), np.int32),
+            ServeLoopConfig(max_new_tokens=10, max_len=16),
+            model=model,
+        )
+
+
+# ---------------------------------------------------------------------------
+# the planned KV-residency policy
+# ---------------------------------------------------------------------------
+
+
+def test_kv_tier_is_registered():
+    from repro.plan import available_solvers
+
+    assert "device+kv" in available_solvers()
+
+
+def test_kv_residency_layers_clamp():
+    """At budgets >= the full cache the staged set must be empty (nothing to
+    move, planned ties LRU); below it the executable set must actually fit
+    resident-remainder + one in-flight block under the budget."""
+    from repro.plan import kv_residency_layers, plan_serving
+
+    cfg = smoke_config("qwen1.5-4b")
+    layout = StagedLM(cfg).cache_layout(2, 14)
+    total = sum(layout.block_bytes)
+    roomy = plan_serving(cfg, 2.0 * total, batch=2, prompt_len=8, max_len=14)
+    assert kv_residency_layers(roomy, budget_bytes=2.0 * total) == []
+    tight = plan_serving(cfg, 0.5 * total, batch=2, prompt_len=8, max_len=14)
+    layers = kv_residency_layers(tight, budget_bytes=0.5 * total)
+    assert layers
+    blocks = layout.block_bytes
+    resident = total - sum(blocks[j] for j in layers)
+    assert resident + max(blocks[j] for j in layers) <= 0.5 * total
+
+
+def test_planned_beats_naive_lru_and_preserves_generations():
+    """The tentpole acceptance at one budget point: a verified kv plan,
+    token-identical generations under planned / naive / unconstrained
+    serving, and planned transfer traffic no worse than the LRU baseline."""
+    from repro.plan import plan_serving
+
+    cfg = smoke_config("qwen1.5-4b")
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8))
+    prompts = prompts.astype(np.int32)
+    loop = ServeLoopConfig(max_new_tokens=6, max_len=14)
+    layout = model.cache_layout(2, 14)
+    budget = 0.5 * sum(layout.block_bytes)
+
+    plan = plan_serving(cfg, budget, batch=2, prompt_len=8, max_len=14)
+    assert plan.verify().ok
+
+    base = run_serving(cfg, params, prompts, loop, model=model)
+    planned = run_serving(
+        cfg, params, prompts, loop, model=model, plan=plan, kv_budget=budget
+    )
+    naive = run_serving(
+        cfg, params, prompts, loop, model=model, kv_policy="lru", kv_budget=budget
+    )
+    np.testing.assert_array_equal(planned["generations"], base["generations"])
+    np.testing.assert_array_equal(naive["generations"], base["generations"])
+    assert planned["kv_host_layers"]
+    assert planned["kv_policy"] == "planned"
+    assert naive["kv_policy"] == "lru"
+    assert 0 < planned["kv_transfer_bytes"] <= naive["kv_transfer_bytes"]
+    assert naive["kv_stall_s"] > 0  # demand misses stall the naive cache
+
+
+def test_lru_policy_requires_budget():
+    cfg = smoke_config("qwen1.5-4b")
+    model = StagedLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.zeros((1, 4), np.int32)
+    with pytest.raises(ValueError, match="kv_budget"):
+        run_serving(
+            cfg,
+            params,
+            prompts,
+            ServeLoopConfig(max_new_tokens=3, max_len=8),
+            model=model,
+            kv_policy="lru",
+        )
